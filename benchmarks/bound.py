@@ -1,0 +1,43 @@
+"""Theorem 1 verification: the FedLDF↔FedAvg gap bound vs n and t.
+
+CSV: n,K,A,B,asymptotic_gap  followed by  t,gap_bound rows for n=4.
+Checks the paper's analytical claims: A<1 under the ξ₂ condition; the gap
+shrinks monotonically in n; it vanishes at n=K.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core.convergence import (BoundParams, asymptotic_gap,
+                                    contraction_A, gap_bound, gap_curve,
+                                    offset_B, xi2_max)
+
+BASE = dict(beta=1.0, xi1=0.05, xi2=0.02, grad_bound=1.0, eta=0.05,
+            num_layers=9, k=20)
+
+
+def run(out=sys.stdout):
+    print("n,K,A,B,asymptotic_gap", file=out)
+    gaps = []
+    for n in (1, 2, 4, 8, 12, 16, 20):
+        p = BoundParams(n=n, **BASE)
+        assert p.xi2 < xi2_max(p), "xi2 violates the convergence condition"
+        a, b, g = contraction_A(p), offset_B(p), asymptotic_gap(p)
+        gaps.append(g)
+        print(f"{n},{p.k},{a:.6f},{b:.6f},{g:.6f}", file=out)
+    assert all(x >= y - 1e-12 for x, y in zip(gaps, gaps[1:])), \
+        "gap must shrink as n grows"
+    assert gaps[-1] == 0.0, "n=K must close the gap (FedLDF -> FedAvg)"
+
+    print("t,gap_bound_n4", file=out)
+    curve = gap_curve(BoundParams(n=4, **BASE), rounds=50, gap0=0.5)
+    for t, g in enumerate(curve):
+        if t % 5 == 0:
+            print(f"{t},{g:.6f}", file=out)
+    return gaps
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Kernel microbenchmarks (CPU host): the FedLDF hot-spot ops.
+
+CSV rows: name,us_per_call,derived — wall time of the jitted jnp fast path
+(the deploy path on CPU) and of the Pallas kernel in interpret mode (the
+correctness path; TPU timing is N/A in this container).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import aggregate as ka
+from repro.kernels import divergence as kd
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=20) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(out=sys.stdout):
+    key = jax.random.PRNGKey(0)
+    r, c = 48, 1 << 18          # 48 layer-units × 262k params/unit
+    a = jax.random.normal(key, (r, c))
+    b = jax.random.normal(jax.random.PRNGKey(1), (r, c))
+    w = jax.random.normal(jax.random.PRNGKey(2), (r,))
+
+    jd = jax.jit(ref.sqdiff_rowsum)
+    jm = jax.jit(ref.masked_accumulate)
+    rows = [
+        ("divergence_jnp_48x262k", _time(jd, a, b),
+         f"{r*c*2*4/1e6:.0f}MB_traffic"),
+        ("masked_acc_jnp_48x262k", _time(jm, a, a, w),
+         f"{r*c*3*4/1e6:.0f}MB_traffic"),
+        ("divergence_pallas_interp_4x4k",
+         _time(lambda x, y: kd.sqdiff_rowsum(x, y, interpret=True),
+               a[:4, :4096], b[:4, :4096], iters=3), "interpret_mode"),
+        ("masked_acc_pallas_interp_4x4k",
+         _time(lambda x, y, z: ka.masked_accumulate(x, y, z, interpret=True),
+               a[:4, :4096], a[:4, :4096], w[:4], iters=3), "interpret_mode"),
+    ]
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}", file=out)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,147 @@
+"""Generate the §Dry-run / §Roofline markdown tables from artifacts.
+
+    PYTHONPATH=src python -m benchmarks.make_report [dir] > experiments/roofline.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from collections import defaultdict
+
+
+def load(artifact_dir: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(artifact_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        r["variant"] = (r["mesh"].split("__", 1)[1]
+                        if "__" in r["mesh"] else "baseline")
+        r["mesh_base"] = r["mesh"].split("__", 1)[0]
+        rows.append(r)
+    return rows
+
+
+def fmt_bytes(x: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(x) < 1024:
+            return f"{x:.1f}{unit}"
+        x /= 1024
+    return f"{x:.1f}PB"
+
+
+def dryrun_table(rows, out):
+    print("\n### §Dry-run — per-device memory & collective mix "
+          "(baseline, both meshes)\n", file=out)
+    print("| arch | shape | mesh | args/dev | temp/dev | coll/dev | "
+          "top collective |", file=out)
+    print("|---|---|---|---|---|---|---|", file=out)
+    for r in rows:
+        if r["variant"] != "baseline":
+            continue
+        mem = r.get("memory_per_device") or {}
+        coll = r.get("collective_by_type", {})
+        top = max(coll, key=coll.get) if any(coll.values()) else "-"
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh_base']} | "
+              f"{fmt_bytes(mem.get('argument_size_in_bytes', 0))} | "
+              f"{fmt_bytes(mem.get('temp_size_in_bytes', 0))} | "
+              f"{fmt_bytes(r['collective_per_device'])} | {top} |", file=out)
+
+
+def recommendation(r) -> str:
+    """One sentence per pair: what would move the dominant term down
+    (grounded in the measured §Perf iterations — EXPERIMENTS.md)."""
+    arch, shape, dom = r["arch"], r["shape"], r["dominant"]
+    ssm = arch.startswith(("mamba", "hymba"))
+    moe = "moe" in arch or "maverick" in arch
+    heads_pad = arch in ("hymba-1.5b", "qwen2-7b")
+    if shape == "train_4k":
+        if dom == "memory":
+            fix = "remat+flash_tune (measured −92 % memory on pair A)"
+            if moe:
+                fix += " then expert_parallel/moe_full (−69 % collective)"
+            elif heads_pad:
+                fix += " + head_pad (25/28H replicate over model=16)"
+            else:
+                fix += " then megatron TP (−79 % collective)"
+            return fix
+        return "megatron column/row TP removes per-matmul partial-sum ARs"
+    if shape == "prefill_32k":
+        if ssm:
+            return ("ssm_proj column/row-parallel projections (measured "
+                    "−67 % collective, −63 % memory on pair B); fused "
+                    "Pallas SSD next")
+        return ("kernels/flash_attention.py keeps probs/carries in VMEM "
+                "(XLA lowering leaves them in HBM); megatron TP for the ARs")
+    # decode shapes
+    if dom in ("memory", "collective"):
+        if ssm and shape == "long_500k":
+            return "already communication-free recurrent state; at roofline"
+        return ("cache_batch layout — B→data, hd→model (measured −40 % "
+                "memory / −36 % collective on pair D); weights stay FSDP "
+                "(megatron refuted: +162 % memory at decode)")
+    return "compute-bound: at roofline for this shape"
+
+
+def roofline_table(rows, out, mesh="16x16"):
+    print(f"\n### §Roofline — three terms per (arch × shape), {mesh}, "
+          "baseline\n", file=out)
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "useful FLOPs ratio | what moves the dominant term |", file=out)
+    print("|---|---|---|---|---|---|---|---|", file=out)
+    for r in rows:
+        if r["variant"] != "baseline" or r["mesh_base"] != mesh:
+            continue
+        print(f"| {r['arch']} | {r['shape']} | "
+              f"{r['t_compute_s']*1e3:.1f}ms | {r['t_memory_s']*1e3:.1f}ms | "
+              f"{r['t_collective_s']*1e3:.1f}ms | **{r['dominant']}** | "
+              f"{r['useful_flops_ratio']:.3f} | {recommendation(r)} |",
+              file=out)
+
+
+def perf_table(rows, out):
+    variants = [r for r in rows if r["variant"] != "baseline"]
+    if not variants:
+        return
+    base = {(r["arch"], r["shape"], r["mesh_base"]): r for r in rows
+            if r["variant"] == "baseline"}
+    print("\n### §Perf — variant deltas vs baseline\n", file=out)
+    print("| arch | shape | variant | Δcompute | Δmemory | Δcollective | "
+          "dominant before→after |", file=out)
+    print("|---|---|---|---|---|---|---|", file=out)
+    for r in variants:
+        b = base.get((r["arch"], r["shape"], r["mesh_base"]))
+        if not b:
+            continue
+
+        def d(key):
+            if b[key] == 0:
+                return "n/a"
+            return f"{(r[key]/b[key]-1)*100:+.1f}%"
+
+        print(f"| {r['arch']} | {r['shape']} | {r['variant']} | "
+              f"{d('t_compute_s')} | {d('t_memory_s')} | "
+              f"{d('t_collective_s')} | {b['dominant']}→{r['dominant']} |",
+              file=out)
+
+
+def main():
+    artifact_dir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    rows = load(artifact_dir)
+    out = sys.stdout
+    n_base = defaultdict(set)
+    for r in rows:
+        if r["variant"] == "baseline":
+            n_base[r["mesh_base"]].add((r["arch"], r["shape"]))
+    print(f"artifacts: {len(rows)} "
+          f"({ {m: len(v) for m, v in n_base.items()} } baseline combos)",
+          file=out)
+    dryrun_table(rows, out)
+    roofline_table(rows, out, "16x16")
+    roofline_table(rows, out, "2x16x16")
+    perf_table(rows, out)
+
+
+if __name__ == "__main__":
+    main()

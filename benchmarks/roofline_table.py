@@ -1,0 +1,39 @@
+"""§Roofline table: aggregate the dry-run JSON artifacts into the
+per-(arch × shape × mesh) three-term table.
+
+CSV: arch,shape,mesh,t_compute_ms,t_memory_ms,t_collective_ms,dominant,
+     useful_ratio,model_gflops,coll_allreduce_gb,coll_allgather_gb
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def run(artifact_dir: str = "experiments/dryrun", out=sys.stdout):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(artifact_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    if not rows:
+        print("# no dry-run artifacts found in", artifact_dir, file=out)
+        return []
+    print("arch,shape,mesh,t_compute_ms,t_memory_ms,t_collective_ms,"
+          "dominant,useful_ratio,model_gflops,coll_ar_gb,coll_ag_gb",
+          file=out)
+    for r in rows:
+        coll = r.get("collective_by_type", {})
+        print(f"{r['arch']},{r['shape']},{r['mesh']},"
+              f"{r['t_compute_s']*1e3:.2f},{r['t_memory_s']*1e3:.2f},"
+              f"{r['t_collective_s']*1e3:.2f},{r['dominant']},"
+              f"{r['useful_flops_ratio']:.4f},"
+              f"{r['model_flops']/1e9:.1f},"
+              f"{coll.get('all-reduce', 0)/1e9:.3f},"
+              f"{coll.get('all-gather', 0)/1e9:.3f}", file=out)
+    return rows
+
+
+if __name__ == "__main__":
+    run(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")

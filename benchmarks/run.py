@@ -1,0 +1,57 @@
+"""Benchmark harness — one section per paper table/figure + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--fl-rounds N] [--skip-fl]
+
+Sections:
+  [kernel]    FedLDF hot-spot op microbenches (name,us_per_call,derived)
+  [comm]      paper §III 80 %-reduction table (VGG-9, K=20, n=4)
+  [bound]     Theorem 1 gap-bound verification
+  [fig3/4]    test-error-vs-communication curves, IID + Dirichlet(α=1)
+  [roofline]  dry-run roofline table (if experiments/dryrun exists)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fl-rounds", type=int, default=30)
+    ap.add_argument("--skip-fl", action="store_true")
+    ap.add_argument("--paper-scale", action="store_true")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    print("# === [kernel] hot-spot microbenchmarks ===")
+    from benchmarks import kernel_bench
+    kernel_bench.run()
+
+    print("# === [comm] paper comm-overhead table (VGG-9, K=20, n=4) ===")
+    from benchmarks import comm_table
+    comm_table.run()
+
+    print("# === [bound] Theorem 1 verification ===")
+    from benchmarks import bound
+    bound.run()
+
+    if not args.skip_fl:
+        print("# === [fig3/fig4] error vs communication ===")
+        from benchmarks import fl_comparison
+        res = fl_comparison.run(paper_scale=args.paper_scale,
+                                rounds=args.fl_rounds)
+        fl_comparison.summarize(res)
+
+        print("# === [n-sweep] Theorem-1 n/K trade-off ablation ===")
+        from benchmarks import n_sweep
+        n_sweep.run(rounds=max(20, args.fl_rounds // 2))
+
+    print("# === [roofline] dry-run table ===")
+    from benchmarks import roofline_table
+    roofline_table.run()
+
+    print(f"# total benchmark wall time: {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

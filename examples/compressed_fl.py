@@ -1,0 +1,84 @@
+"""Beyond-paper example: FedLDF + quantized-delta uploads + error feedback.
+
+Composes the paper's layer selection (n/K uplink) with int-b delta
+quantization (b/32) and client-side error feedback — e.g. n/K=0.2 × int8
+⇒ ~97.5 % total uplink reduction vs FedAvg.
+
+    PYTHONPATH=src python examples/compressed_fl.py --bits 8 --rounds 20
+"""
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.units import UnitMap
+from repro.data import FederatedData, dirichlet_partition, make_image_dataset
+from repro.federated import FLConfig, build_round_fn, sample_clients
+from repro.models import cnn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--no-error-feedback", action="store_true")
+    args = ap.parse_args()
+
+    cfg = cnn.VGGConfig().reduced()
+    n_clients, k, n = 12, 6, 2
+    train, test = make_image_dataset(num_train=2400, num_test=480, seed=0)
+    parts = dirichlet_partition(train.ys, n_clients, alpha=1.0, seed=0)
+    data = FederatedData(train.xs, train.ys, parts)
+    params = cnn.init_params(jax.random.PRNGKey(0), cfg)
+    umap = UnitMap.build(params)
+    loss_fn = functools.partial(lambda c, p, b: cnn.classify_loss(p, c, b),
+                                cfg)
+    test_batch = {"images": jnp.asarray(test.xs),
+                  "labels": jnp.asarray(test.ys)}
+    eval_fn = jax.jit(lambda p: 1.0 - cnn.accuracy(p, cfg, test_batch))
+
+    use_ef = not args.no_error_feedback
+    fl = FLConfig(algo="fedldf", num_clients=n_clients, clients_per_round=k,
+                  top_n=n, lr=0.08, mode="vmap", batch_per_client=16,
+                  quantize_bits=args.bits, error_feedback=use_ef)
+    round_fn = jax.jit(build_round_fn(loss_fn, umap, fl))
+
+    # error-feedback residuals live per client (host-side store, all N)
+    zero_res = jax.tree.map(lambda l: jnp.zeros_like(l, jnp.float32), params)
+    residuals = {i: zero_res for i in range(n_clients)} if use_ef else None
+
+    rng = np.random.default_rng(0)
+    sizes_all = data.data_sizes()
+    uplink = fedavg_ref = 0.0
+    for t in range(args.rounds):
+        clients = sample_clients(rng, n_clients, k)
+        batch = {kk: jnp.asarray(v) for kk, v in
+                 data.round_batch(clients, fl.batch_per_client, rng).items()}
+        sizes = jnp.asarray(sizes_all[clients])
+        key = jax.random.PRNGKey(t)
+        if use_ef:
+            res_in = jax.tree.map(lambda *ls: jnp.stack(ls),
+                                  *[residuals[int(c)] for c in clients])
+            new_p, metrics = round_fn(params, batch, sizes, key, res_in)
+            for i, c in enumerate(clients):
+                residuals[int(c)] = jax.tree.map(lambda l: l[i],
+                                                 metrics["residuals"])
+        else:
+            new_p, metrics = round_fn(params, batch, sizes, key)
+        params = new_p
+        uplink += float(metrics["comm"]["uplink_total"])
+        fedavg_ref += float(metrics["comm"]["fedavg_uplink"])
+        if t % 5 == 0 or t == args.rounds - 1:
+            print(f"round {t:3d} loss {float(metrics['loss']):.4f} "
+                  f"err {float(eval_fn(params)):.4f} "
+                  f"uplink {uplink/1e6:7.2f}MB "
+                  f"(saved {100*(1-uplink/fedavg_ref):.1f}% vs FedAvg)")
+    print(f"\nint{args.bits} + top-{n}/{k} selection + "
+          f"{'EF' if use_ef else 'no EF'}: "
+          f"total uplink saving {100*(1-uplink/fedavg_ref):.2f}%")
+
+
+if __name__ == "__main__":
+    main()

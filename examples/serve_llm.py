@@ -1,0 +1,66 @@
+"""Serve a FedLDF-trained LLM: federated fine-tune (scan mode, the
+large-model path) then batched autoregressive decoding with the KV cache.
+
+    PYTHONPATH=src python examples/serve_llm.py --arch mamba2-780m --rounds 3
+"""
+import argparse
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data import lm_federated, make_lm_dataset
+from repro.federated import FLConfig, run_training
+from repro.models import decode as dec
+from repro.models import transformer as tf
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="mamba2-780m")
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--steps", type=int, default=12)
+    args = ap.parse_args()
+
+    # reduced variant: same family wiring, CPU-sized
+    cfg = dataclasses.replace(get_config(args.arch).reduced(),
+                              param_dtype="float32",
+                              compute_dtype="float32")
+    print(f"arch={args.arch} (reduced: {cfg.num_layers}L d={cfg.d_model})")
+
+    # --- federated fine-tuning on non-IID domain data (scan mode) ------
+    toks, domains = make_lm_dataset(num_sequences=128, seq_len=48,
+                                    vocab=cfg.vocab_size, seed=0)
+    data = lm_federated(toks, domains, num_clients=6)
+    fl = FLConfig(algo="fedldf", num_clients=6, clients_per_round=3,
+                  top_n=1, lr=0.05, mode="scan", batch_per_client=4)
+    loss_fn = functools.partial(lambda c, p, b: tf.lm_loss(p, c, b), cfg)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    params, log = run_training(params, loss_fn, data, fl, rounds=args.rounds,
+                               seed=0, verbose=True)
+    print("uplink saved vs FedAvg:", f"{log.meter.savings_frac*100:.1f}%")
+
+    # --- serve the aggregated global model ------------------------------
+    prompts = jnp.asarray(toks[:4, :16].astype(np.int32))
+    if cfg.is_encdec:
+        enc = jax.random.normal(jax.random.PRNGKey(1),
+                                (4, 16, cfg.frontend_dim))
+        logits, cache = dec.prefill(params, cfg, prompts, enc_inputs=enc,
+                                    max_len=16 + args.steps)
+    else:
+        logits, cache = dec.prefill(params, cfg, prompts,
+                                    max_len=16 + args.steps)
+    out = [jnp.argmax(logits, -1)[:, None]]
+    for _ in range(args.steps - 1):
+        logits, cache = dec.decode_step(params, cfg, out[-1], cache)
+        out.append(jnp.argmax(logits, -1)[:, None])
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    for i in range(2):
+        print(f"prompt {prompts[i, :8].tolist()} -> gen {gen[i].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""FedLDF reproduction: communication-efficient FL aggregation with layer
+divergence feedback (Wang et al., 2024) as a multi-pod JAX framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+"""Checkpointing."""
+from repro.checkpoint.io import load_pytree, save_pytree
+
+__all__ = ["save_pytree", "load_pytree"]

@@ -1,0 +1,56 @@
+"""Pytree checkpoint I/O (npz, path-flattened keys).
+
+Simple, dependency-free persistence for server state between FL rounds and
+for the serving examples. Keys are '/'-joined tree paths; structure is
+reconstructed from the keys, so load does not need a template.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+Pytree = Any
+_SEP = "/"
+
+
+def _flatten(tree: Pytree, prefix: str = "") -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}{_SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}{_SEP}"))
+    else:
+        out[prefix.rstrip(_SEP)] = np.asarray(tree)
+    return out
+
+
+def save_pytree(path: str, tree: Pytree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+
+
+def load_pytree(path: str) -> Pytree:
+    data = np.load(path, allow_pickle=False)
+    root: dict = {}
+    for key in data.files:
+        parts = key.split(_SEP)
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = data[key]
+
+    def delistify(node):
+        if isinstance(node, dict):
+            if node and all(k.startswith("#") for k in node):
+                items = sorted(node.items(), key=lambda kv: int(kv[0][1:]))
+                return tuple(delistify(v) for _, v in items)
+            return {k: delistify(v) for k, v in node.items()}
+        return node
+
+    return delistify(root)

@@ -1,0 +1,18 @@
+"""vgg9-cifar10 — the paper's own experimental setup (§III-A).
+
+VGG-9 (8 conv + 1 FC), CIFAR-10-like data, N=50 clients, K=20 participants
+per round, FedLDF n=4 (80 % uplink saving), T=1000 rounds, IID and
+Dirichlet(α=1) splits.
+"""
+from repro.federated.server import FLConfig
+from repro.models.cnn import VGGConfig
+
+
+def config() -> VGGConfig:
+    return VGGConfig()
+
+
+def fl_config(algo: str = "fedldf") -> FLConfig:
+    return FLConfig(algo=algo, num_clients=50, clients_per_round=20,
+                    top_n=4, local_steps=1, lr=0.05, mode="vmap",
+                    fedadp_keep=0.2, batch_per_client=32)

@@ -1,0 +1,20 @@
+"""FedLDF core: the paper's contribution as composable JAX modules."""
+from repro.core import (aggregation, comm, compress, convergence, fedadp,
+                        lowrank, selection, units)
+from repro.core.aggregation import (aggregate_stacked, fedavg_stacked,
+                                    streaming_add, streaming_finalize,
+                                    streaming_init, unit_weights)
+from repro.core.comm import CommMeter, round_comm
+from repro.core.convergence import BoundParams, asymptotic_gap, contraction_A
+from repro.core.selection import (client_dropout, full_participation,
+                                  random_per_layer, topn_divergence)
+from repro.core.units import UnitMap
+
+__all__ = [
+    "aggregation", "comm", "convergence", "fedadp", "selection", "units",
+    "aggregate_stacked", "fedavg_stacked", "streaming_add",
+    "streaming_finalize", "streaming_init", "unit_weights",
+    "CommMeter", "round_comm", "BoundParams", "asymptotic_gap",
+    "contraction_A", "client_dropout", "full_participation",
+    "random_per_layer", "topn_divergence", "UnitMap",
+]

@@ -1,0 +1,120 @@
+"""Model aggregation (paper Eqs. 1, 5, 6).
+
+Two execution layouts are supported:
+
+- **stacked** (``vmap`` client mode): all K client models are materialised
+  with a leading client axis; aggregation is a masked weighted mean over that
+  axis (small models — the paper's own VGG-9 regime).
+- **streaming** (``scan`` client mode): clients are visited sequentially and
+  added into a float32 accumulator with per-unit weights (large models; see
+  DESIGN.md §3 two-phase recompute).
+
+Both produce bitwise-identical semantics: Eq. 5
+``Ĝ_u = Σ_k s[k,u]·w_k·Θ_{k,u} / Σ_m s[m,u]·w_m``.
+
+With ``s ≡ 1`` this is exactly FedAvg (Eq. 1) — tested as the n=K degeneracy
+of Theorem 1.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.units import UnitMap, tree_zeros_like
+
+Pytree = Any
+
+
+def unit_weights(selection: jnp.ndarray,
+                 data_sizes: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-(client, unit) aggregation weights and per-unit denominators.
+
+    selection: (K, U) ∈ {0,1}; data_sizes: (K,) |D_k|.
+    Returns (numer_w: (K, U), denom: (U,)) with
+    ``numer_w[k,u] = s[k,u]·|D_k|`` and ``denom[u] = Σ_m s[m,u]·|D_m|``.
+    """
+    w = selection * data_sizes[:, None].astype(jnp.float32)
+    return w, w.sum(axis=0)
+
+
+def aggregate_stacked(stacked_params: Pytree, umap: UnitMap,
+                      selection: jnp.ndarray, data_sizes: jnp.ndarray,
+                      fallback: Pytree | None = None) -> Pytree:
+    """Eq. 5 over client-stacked params (every leaf has leading K).
+
+    ``fallback`` (usually the previous global model) is used for any unit
+    whose denominator is zero (cannot happen with top-n selection, which
+    guarantees n ≥ 1 clients per unit, but can with dropout-style policies).
+    """
+    w, denom = unit_weights(selection, data_sizes)          # (K,U), (U,)
+    safe = jnp.where(denom > 0, denom, 1.0)
+    frac = w / safe[None, :]                                # (K, U)
+
+    k = selection.shape[0]
+
+    def agg_one(key: str):
+        off, n = umap.spans[key]
+        seg = jax.lax.dynamic_slice(frac, (0, off), (k, n))  # (K, n)
+        seg_d = jax.lax.dynamic_slice(denom, (off,), (n,))   # (n,)
+
+        def combine(leaf, fb):
+            # leaf: (K, n, ...) for stacked units, (K, ...) otherwise.
+            if n > 1:
+                wx = seg.reshape((k, n) + (1,) * (leaf.ndim - 2))
+            else:
+                wx = seg.reshape((k,) + (1,) * (leaf.ndim - 1))
+            out = jnp.sum(leaf.astype(jnp.float32) * wx, axis=0)
+            if fb is not None:
+                if n > 1:
+                    alive = (seg_d > 0).reshape((n,) + (1,) * (out.ndim - 1))
+                else:
+                    alive = seg_d[0] > 0
+                out = jnp.where(alive, out, fb.astype(jnp.float32))
+            return out.astype(leaf.dtype)
+
+        fsub = fallback[key] if fallback is not None else None
+        if fsub is None:
+            return jax.tree.map(lambda l: combine(l, None),
+                                stacked_params[key])
+        return jax.tree.map(combine, stacked_params[key], fsub)
+
+    return {key: agg_one(key) for key in stacked_params}
+
+
+def fedavg_stacked(stacked_params: Pytree, data_sizes: jnp.ndarray) -> Pytree:
+    """Eq. 1 — plain FedAvg over client-stacked params."""
+    w = data_sizes.astype(jnp.float32)
+    frac = w / w.sum()
+
+    def combine(leaf):
+        wx = frac.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.sum(leaf.astype(jnp.float32) * wx, axis=0).astype(leaf.dtype)
+
+    return jax.tree.map(combine, stacked_params)
+
+
+# ----------------------------------------------------------------------
+# Streaming layout (scan over clients) — same math, O(1)-client memory.
+# ----------------------------------------------------------------------
+def streaming_init(global_params: Pytree) -> Pytree:
+    """Float32 accumulator for Eq. 5 numerators."""
+    return tree_zeros_like(global_params, dtype=jnp.float32)
+
+
+def streaming_add(acc: Pytree, client_params: Pytree, umap: UnitMap,
+                  client_frac: jnp.ndarray) -> Pytree:
+    """acc += client_frac[u] * Θ_k  (client_frac = w[k]/denom, shape (U,))."""
+    return umap.accumulate(acc, client_params, client_frac)
+
+
+def streaming_finalize(acc: Pytree, umap: UnitMap, denom: jnp.ndarray,
+                       fallback: Pytree) -> Pytree:
+    """Replace zero-denominator units with the previous global model and cast
+    back to the parameter dtype."""
+    alive = (denom > 0).astype(jnp.float32)
+    kept = umap.scale_by_unit(acc, alive)
+    fb = umap.scale_by_unit(fallback, 1.0 - alive)
+    return jax.tree.map(lambda a, b, g: (a + b.astype(jnp.float32)).astype(g.dtype),
+                        kept, fb, fallback)

@@ -1,0 +1,85 @@
+"""Communication accounting (the quantity the paper optimises).
+
+The paper's headline result is an ~80 % reduction in *uplink* bytes: with
+top-n-per-layer selection only ``n/K`` of the layer payloads travel from
+clients to the server, plus a negligible divergence-feedback vector
+(K · U float32 scalars per round).
+
+`round_comm` is a pure jit-safe function of the selection matrix; the
+:class:`CommMeter` accumulates totals across rounds on the host.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.units import UnitMap
+
+DIVERGENCE_SCALAR_BYTES = 4  # float32 feedback scalars
+
+
+def round_comm(selection: jnp.ndarray, umap: UnitMap, *,
+               divergence_feedback: bool = True,
+               param_bytes_override: float | None = None) -> dict:
+    """Per-round communication in bytes.
+
+    selection: (K, U) ∈ {0,1}.
+    Returns dict with jnp scalars:
+      uplink_payload   — Σ_{k,u} s[k,u]·bytes(u)        (selected layers)
+      uplink_feedback  — K·U·4 if divergence feedback is on (FedLDF only)
+      uplink_total
+      downlink         — K·total_model_bytes (server broadcast, unchanged
+                         vs FedAvg; the paper optimises uplink)
+      fedavg_uplink    — K·total_model_bytes (reference)
+      savings_frac     — 1 − uplink_total/fedavg_uplink
+    """
+    k = selection.shape[0]
+    scale = 1.0 if param_bytes_override is None else param_bytes_override / 4.0
+    unit_bytes = umap.unit_bytes_array() * scale
+    payload = jnp.sum(selection * unit_bytes[None, :])
+    feedback = jnp.float32(
+        k * umap.num_units * DIVERGENCE_SCALAR_BYTES if divergence_feedback
+        else 0.0)
+    # reference = uncompressed FedAvg (full model, fp32 wire format)
+    fedavg_up = jnp.float32(k) * jnp.float32(umap.total_bytes)
+    uplink = payload + feedback
+    return {
+        "uplink_payload": payload,
+        "uplink_feedback": feedback,
+        "uplink_total": uplink,
+        "downlink": fedavg_up,
+        "fedavg_uplink": fedavg_up,
+        "savings_frac": 1.0 - uplink / fedavg_up,
+    }
+
+
+@dataclasses.dataclass
+class CommMeter:
+    """Host-side cumulative communication meter."""
+
+    uplink_bytes: float = 0.0
+    downlink_bytes: float = 0.0
+    fedavg_uplink_bytes: float = 0.0
+    rounds: int = 0
+
+    def update(self, round_stats: dict) -> None:
+        self.uplink_bytes += float(round_stats["uplink_total"])
+        self.downlink_bytes += float(round_stats["downlink"])
+        self.fedavg_uplink_bytes += float(round_stats["fedavg_uplink"])
+        self.rounds += 1
+
+    @property
+    def savings_frac(self) -> float:
+        if self.fedavg_uplink_bytes == 0:
+            return 0.0
+        return 1.0 - self.uplink_bytes / self.fedavg_uplink_bytes
+
+    def summary(self) -> dict:
+        return {
+            "rounds": self.rounds,
+            "uplink_MB": self.uplink_bytes / 1e6,
+            "downlink_MB": self.downlink_bytes / 1e6,
+            "fedavg_uplink_MB": self.fedavg_uplink_bytes / 1e6,
+            "uplink_savings_frac": self.savings_frac,
+        }

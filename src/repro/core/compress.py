@@ -1,0 +1,101 @@
+"""Beyond-paper: quantized delta upload with error feedback.
+
+The paper reduces uplink by a factor n/K via layer selection. Orthogonally,
+each *selected* layer can be uploaded as a quantized **delta** against the
+broadcast global model (the client already holds Ĝ^t):
+
+    upload_k = Q_b(Θ_k − Ĝ + e_k),   e_k' = (Θ_k − Ĝ + e_k) − Q_b(...)
+
+with symmetric per-layer-unit int-b quantization Q_b and client-side error
+feedback e_k (residuals carried across rounds so quantization noise averages
+out instead of accumulating). The server reconstructs Θ̂_k = Ĝ + dequant and
+aggregates with Eq. 5 unchanged. Uplink becomes `n/K · b/32` of FedAvg —
+e.g. n/K=0.2 with int8 ⇒ 95 % total reduction.
+
+Composability with FedLDF is the point: selection is per layer, quantization
+is per layer, and the divergence feedback (Eq. 3) is computed on the
+*unquantized* local model, so the protocol is unchanged upstream.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.units import UnitMap, tree_sub
+
+Pytree = Any
+
+
+def quantize_unit_symmetric(delta: Pytree, umap: UnitMap, bits: int
+                            ) -> tuple[Pytree, jnp.ndarray]:
+    """Symmetric per-unit quantization. Returns (int levels as float pytree,
+    per-unit scales (U,)). Levels ∈ [−(2^{b−1}−1), 2^{b−1}−1]."""
+    qmax = float(2 ** (bits - 1) - 1)
+    maxabs = jnp.zeros((umap.num_units,), jnp.float32)
+    for key, (off, n) in umap.spans.items():
+        for leaf in jax.tree.leaves(delta[key]):
+            flat = jnp.abs(leaf.astype(jnp.float32)).reshape(
+                (n, -1) if n > 1 else (1, -1)).max(axis=1)
+            seg = jax.lax.dynamic_slice(maxabs, (off,), (n,))
+            maxabs = jax.lax.dynamic_update_slice(
+                maxabs, jnp.maximum(seg, flat), (off,))
+    scales = jnp.maximum(maxabs, 1e-12) / qmax
+
+    inv = 1.0 / scales
+
+    def q_key(key):
+        off, n = umap.spans[key]
+        seg = jax.lax.dynamic_slice(inv, (off,), (n,))
+
+        def q(leaf):
+            s = seg.reshape((n,) + (1,) * (leaf.ndim - 1)) if n > 1 else seg[0]
+            return jnp.round(jnp.clip(leaf.astype(jnp.float32) * s,
+                                      -qmax, qmax))
+
+        return jax.tree.map(q, delta[key])
+
+    return {k: q_key(k) for k in delta}, scales
+
+
+def dequantize_unit(levels: Pytree, umap: UnitMap,
+                    scales: jnp.ndarray) -> Pytree:
+    def dq_key(key):
+        off, n = umap.spans[key]
+        seg = jax.lax.dynamic_slice(scales, (off,), (n,))
+
+        def dq(leaf):
+            s = seg.reshape((n,) + (1,) * (leaf.ndim - 1)) if n > 1 else seg[0]
+            return leaf * s
+
+        return jax.tree.map(dq, levels[key])
+
+    return {k: dq_key(k) for k in levels}
+
+
+def compress_upload(local: Pytree, global_params: Pytree, umap: UnitMap,
+                    bits: int, residual: Optional[Pytree] = None
+                    ) -> tuple[Pytree, Pytree]:
+    """Client-side: returns (Θ̂ as the server reconstructs it, new residual).
+
+    Θ̂ = Ĝ + dequant(Q(Δ + e));  e' = (Δ + e) − dequant(Q(Δ + e)).
+    """
+    delta = tree_sub(local, global_params)
+    if residual is not None:
+        delta = jax.tree.map(
+            lambda d, e: d + e.astype(d.dtype), delta, residual)
+    levels, scales = quantize_unit_symmetric(delta, umap, bits)
+    recon_delta = dequantize_unit(levels, umap, scales)
+    new_residual = jax.tree.map(
+        lambda d, r: d.astype(jnp.float32) - r, delta, recon_delta)
+    theta_hat = jax.tree.map(
+        lambda g, r: (g.astype(jnp.float32) + r).astype(g.dtype),
+        global_params, recon_delta)
+    return theta_hat, new_residual
+
+
+def quantized_bytes_per_param(bits: int) -> float:
+    """Payload bytes per parameter (levels only; scales are U floats,
+    negligible) — feeds CommMeter's param_bytes_override."""
+    return bits / 8.0

@@ -1,0 +1,55 @@
+"""Client-selection policies (Eq. 4 and the paper's baselines).
+
+Every policy produces a selection matrix ``s ∈ {0,1}^{K×U}`` (clients ×
+layer-units). ``s[k, u] = 1`` iff layer-unit ``u`` of client ``k`` is uploaded
+and enters the Eq. 5 aggregation. All policies are jit-safe.
+
+Policies
+--------
+- :func:`topn_divergence`  — FedLDF (Eq. 4): per unit, the n clients with the
+  largest divergence.
+- :func:`random_per_layer` — "random" baseline: per unit, n uniform clients.
+- :func:`client_dropout`   — HDFL baseline [7]: n whole clients, all units.
+- :func:`full_participation` — FedAvg: everything.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topn_divergence(divergence: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Eq. 4: top-n clients per layer-unit by divergence.
+
+    divergence: (K, U) — ΔΘ_{k,u} from Eq. 3.
+    Returns s: (K, U) float32 with exactly n ones per column.
+    Ties are broken by client index (jax.lax.top_k is deterministic).
+    """
+    k, u = divergence.shape
+    if not 1 <= n <= k:
+        raise ValueError(f"top-n out of range: n={n}, K={k}")
+    # top_k over the client axis: work in (U, K).
+    _, idx = jax.lax.top_k(divergence.T, n)          # (U, n)
+    onehot = jax.nn.one_hot(idx, k, dtype=jnp.float32)  # (U, n, K)
+    return onehot.sum(axis=1).T                      # (K, U)
+
+
+def random_per_layer(key: jax.Array, num_clients: int, num_units: int,
+                     n: int) -> jnp.ndarray:
+    """Random baseline: per unit, choose n clients uniformly at random."""
+    scores = jax.random.uniform(key, (num_clients, num_units))
+    return topn_divergence(scores, n)
+
+
+def client_dropout(key: jax.Array, num_clients: int, num_units: int,
+                   n: int) -> jnp.ndarray:
+    """HDFL [7]: choose n whole clients; they upload *all* units."""
+    scores = jax.random.uniform(key, (num_clients,))
+    _, idx = jax.lax.top_k(scores, n)
+    rows = jax.nn.one_hot(idx, num_clients, dtype=jnp.float32).sum(axis=0)
+    return jnp.broadcast_to(rows[:, None], (num_clients, num_units))
+
+
+def full_participation(num_clients: int, num_units: int) -> jnp.ndarray:
+    """FedAvg: s ≡ 1."""
+    return jnp.ones((num_clients, num_units), dtype=jnp.float32)

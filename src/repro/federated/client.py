@@ -1,0 +1,50 @@
+"""ClientUpdate (paper Algorithm 1, lines 11-15).
+
+A client receives the global model, runs ``local_steps`` optimizer steps on
+its local batch (the paper uses exactly one SGD step — "after one time local
+training"), and returns its local model. The update is a *pure deterministic*
+function of (global params, client batch) — the property that enables the
+two-phase recompute execution mode for large models (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import sgd
+from repro.optim.opt import Optimizer
+
+Pytree = Any
+LossFn = Callable[[Pytree, dict], jnp.ndarray]
+
+
+def make_local_update(loss_fn: LossFn, opt: Optimizer,
+                      local_steps: int = 1):
+    """Returns local_update(global_params, batch) -> (local_params, mean_loss).
+
+    ``batch`` leaves are (b, ...) — the same batch is used for every local
+    step (paper setting: local_steps=1 makes this exact; >1 approximates
+    multi-epoch local training on the client's sampled data).
+    """
+
+    def local_update(global_params: Pytree, batch: dict):
+        ostate0 = opt.init(global_params)
+
+        def step(carry, _):
+            params, ostate = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            params, ostate = opt.update(grads, ostate, params)
+            return (params, ostate), loss
+
+        (params, _), losses = jax.lax.scan(
+            step, (global_params, ostate0), None, length=local_steps)
+        return params, losses.mean()
+
+    return local_update
+
+
+def plain_sgd_client(loss_fn: LossFn, lr: float, local_steps: int = 1):
+    """The paper's exact ClientUpdate: Θ_k ← Θ − η∇F_k(Θ)."""
+    return make_local_update(loss_fn, sgd(lr), local_steps)

@@ -1,0 +1,11 @@
+"""Participant sampling (Algorithm 1 line 5: C_t ← random(K, max(C·N, 1)))."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def sample_clients(rng: np.random.Generator, num_clients: int,
+                   k: int) -> np.ndarray:
+    """Uniformly sample K distinct participants for this round."""
+    k = max(1, min(k, num_clients))
+    return rng.choice(num_clients, size=k, replace=False)

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels.
+
+FedLDF hot spots:
+- divergence.py : per-row Σ(a−b)² (Eq. 3 inner reduction), VMEM-tiled.
+- aggregate.py  : fused acc += w[r]·x (Eq. 5 accumulation).
+
+Substrate hot spot (motivated by §Perf pairs A/E — XLA keeps flash
+probabilities in HBM; the fused kernel keeps them in VMEM):
+- flash_attention.py : GQA flash attention (causal/sliding-window).
+
+- ref.py : pure-jnp oracles (ground truth + CPU fast path).
+- ops.py : backend-dispatching wrappers used by repro.core.
+"""
+from repro.kernels import aggregate, divergence, flash_attention, ops, ref
+
+__all__ = ["aggregate", "divergence", "flash_attention", "ops", "ref"]

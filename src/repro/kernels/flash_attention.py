@@ -1,0 +1,163 @@
+"""Pallas TPU flash attention (GQA, causal, sliding window).
+
+Motivated directly by the §Perf findings (EXPERIMENTS.md pairs A/E): XLA
+lowers the pure-JAX online-softmax scan with probability and carry tensors
+in HBM — flash's whole point is keeping them in VMEM. This kernel is the
+TPU-native fix: the (TQ, TK) score/probability tile lives in registers/VMEM
+only; running max/denominator are (TQ, 1) blocks revisited across the KV
+grid dimension (TPU grids execute sequentially minor-most-last, the same
+reduction pattern as kernels/divergence.py).
+
+Layout: q (BH, Sq, hd), k/v (BKV, Skv, hd) with BH = B·H, BKV = B·KV —
+GQA needs no head-repeat: the kv BlockSpec index-maps bh → bh // group.
+fp32 accumulation; bf16/f32 inputs.
+
+Block shapes default to (TQ, TK) = (256, 512): q/k/v tiles + fp32
+accumulator ≈ (256+2·512)·128·4 B ≈ 0.7 MB ≪ VMEM; hd is MXU-lane-aligned
+(128) for every assigned architecture.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TQ = 256
+DEFAULT_TK = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int,
+                  tq: int, tk: int, kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # tile-level skip: fully-masked (causal/window) KV tiles do no work
+    run = jnp.bool_(True)
+    if causal:
+        run &= (ki * tk) <= (qi * tq + tq - 1)
+    if window > 0:
+        run &= ((ki + 1) * tk - 1) > (qi * tq - window)
+
+    @pl.when(run)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32)                      # (TQ, hd)
+        k = k_ref[0].astype(jnp.float32)                      # (TK, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale       # (TQ, TK)
+
+        q_pos = qi * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+        k_pos = ki * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+        ok = k_pos < kv_len                                   # pad mask
+        if causal:
+            ok &= k_pos <= q_pos
+        if window > 0:
+            ok &= k_pos > q_pos - window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[0]                                     # (TQ, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        # guard fully-masked rows: exp(NEG_INF − NEG_INF) must be 0, not 1
+        safe = m_new > NEG_INF / 2
+        p = jnp.where(safe & ok, jnp.exp(s - m_new), 0.0)
+        corr = jnp.where(safe & (m_prev > NEG_INF / 2),
+                         jnp.exp(m_prev - m_new), 0.0)
+        l_ref[...] = (l_ref[0] * corr + p.sum(axis=1, keepdims=True))[None]
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (TQ, hd)
+        o_ref[...] = (o_ref[0] * corr + pv)[None]
+        m_ref[...] = m_new[None]
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[...] = o_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "tq", "tk", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    tq: int = DEFAULT_TQ, tk: int = DEFAULT_TK,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: (BH, Sq, hd); k, v: (BKV, Skv, hd), BH = BKV·group.
+
+    Returns (BH, Sq, hd) in q.dtype. Sq/Skv are zero-padded to tile
+    multiples internally (padded KV masked via kv_len).
+    """
+    bh, sq, hd = q.shape
+    bkv, skv, _ = k.shape
+    assert bh % bkv == 0, (bh, bkv)
+    group = bh // bkv
+    tq = min(tq, max(8, sq))
+    tk = min(tk, max(128, skv))
+    sq_p = pl.cdiv(sq, tq) * tq
+    skv_p = pl.cdiv(skv, tk) * tk
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0)))
+    if skv_p != skv:
+        k = jnp.pad(k, ((0, 0), (0, skv_p - skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skv_p - skv), (0, 0)))
+
+    grid = (bh, sq_p // tq, skv_p // tk)
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / (hd ** 0.5), causal=causal,
+        window=window, tq=tq, tk=tk, kv_len=skv)
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, tk, hd),
+                         lambda b, i, j, group=group: (b // group, j, 0)),
+            pl.BlockSpec((1, tk, hd),
+                         lambda b, i, j, group=group: (b // group, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, tq, 1), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, tq, 1), lambda b, i, j: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sq_p, hd), jnp.float32),
+            jax.ShapeDtypeStruct((bh, sq_p, 1), jnp.float32),
+            jax.ShapeDtypeStruct((bh, sq_p, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq, :].astype(q.dtype)
+
+
+def ref_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """Pure-jnp oracle, same GQA layout as the kernel."""
+    bh, sq, hd = q.shape
+    bkv, skv, _ = k.shape
+    group = bh // bkv
+    kr = jnp.repeat(k, group, axis=0)
+    vr = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / (hd ** 0.5)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      vr.astype(jnp.float32)).astype(q.dtype)

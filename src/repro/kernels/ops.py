@@ -1,0 +1,44 @@
+"""Dispatching wrappers for the FedLDF kernels.
+
+On TPU the Pallas kernels run compiled; on CPU (this container) the pure-jnp
+reference is both the oracle and the fast path (interpret-mode Pallas
+executes the kernel body in Python and is only used for validation).
+
+Set ``REPRO_FORCE_PALLAS=1`` to route through the Pallas kernels in
+interpret mode everywhere (used by tests/CI to exercise the kernel path).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import aggregate as _aggregate
+from repro.kernels import divergence as _divergence
+from repro.kernels import ref as _ref
+
+
+def _use_pallas() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS", "0") == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def sqdiff_rowsum(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(R, C), (R, C) -> (R,) float32 per-row Σ(a−b)²."""
+    if _use_pallas():
+        return _divergence.sqdiff_rowsum(a, b, interpret=_interpret())
+    return _ref.sqdiff_rowsum(a, b)
+
+
+def masked_accumulate(acc: jnp.ndarray, x: jnp.ndarray,
+                      w: jnp.ndarray) -> jnp.ndarray:
+    """(R, C), (R, C), (R,) -> (R, C) float32: acc + w[:,None]*x."""
+    if _use_pallas():
+        return _aggregate.masked_accumulate(acc, x, w, interpret=_interpret())
+    return _ref.masked_accumulate(acc, x, w)

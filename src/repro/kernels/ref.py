@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground-truth implementations used (a) by tests to validate the
+kernels and (b) as the CPU fast path (interpret-mode Pallas is slow).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sqdiff_rowsum(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Per-row sum of squared differences.
+
+    a, b: (R, C) same shape/dtype. Returns (R,) float32.
+    This is the inner reduction of the paper's Eq. 3 layer divergence.
+    """
+    d = a.astype(jnp.float32) - b.astype(jnp.float32)
+    return jnp.sum(d * d, axis=1)
+
+
+def masked_accumulate(acc: jnp.ndarray, x: jnp.ndarray,
+                      w: jnp.ndarray) -> jnp.ndarray:
+    """acc + w[:, None] * x — the Eq. 5 per-layer weighted accumulation.
+
+    acc: (R, C) float32 accumulator; x: (R, C) any float dtype;
+    w: (R,) per-row (per layer-unit) weight. Returns (R, C) float32.
+    """
+    return acc + w.astype(jnp.float32)[:, None] * x.astype(jnp.float32)

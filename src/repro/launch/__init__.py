@@ -1,0 +1,8 @@
+"""Launchers: production mesh, dry-run, training and serving CLIs.
+
+NOTE: repro.launch.dryrun must be imported/run first in its own process —
+it sets XLA_FLAGS for 512 placeholder devices before any JAX import.
+"""
+from repro.launch.mesh import data_axes, make_host_mesh, make_production_mesh
+
+__all__ = ["data_axes", "make_host_mesh", "make_production_mesh"]

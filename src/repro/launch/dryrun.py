@@ -1,0 +1,175 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+mesh, print memory/cost analysis, and dump roofline artifacts.
+
+MUST be run as its own process (the XLA flag above is applied before any
+other import initialises JAX):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Artifacts: one JSON per (arch, shape, mesh) with per-device FLOPs/bytes,
+collective-byte breakdown and the three roofline terms (§Roofline).
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import hloparse
+from repro.launch import roofline as rl
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.launch.shapes import (FL_TRAIN, SHAPES, adapt_config,
+                                 build_program)
+from repro.launch.sharding import batch_specs, param_specs, to_named
+
+
+def _in_shardings(program, mesh, overrides=None):
+    shardings = []
+    for arg, kind in zip(program.args, program.arg_kinds):
+        if kind == "params":
+            shardings.append(to_named(param_specs(arg, mesh,
+                                                  overrides=overrides), mesh))
+        elif kind == "batch":
+            client_leading = program.flcfg is not None
+            shardings.append(to_named(
+                batch_specs(arg, mesh, client_leading=client_leading), mesh))
+        elif kind == "cache":
+            shardings.append(to_named(param_specs(arg, mesh,
+                                                  overrides=overrides), mesh))
+        else:  # scalar
+            shardings.append(jax.tree.map(
+                lambda _: NamedSharding(mesh, P()), arg))
+    return tuple(shardings)
+
+
+def _out_shardings(program, mesh, in_shardings, kind: str):
+    out_struct = jax.eval_shape(program.fn, *program.args)
+    rep = NamedSharding(mesh, P())
+    if kind == "train":
+        # (new_params, metrics)
+        return (in_shardings[0], jax.tree.map(lambda _: rep, out_struct[1]))
+    # (logits, cache)
+    cache_like = out_struct[1]
+    cache_shard = to_named(param_specs(cache_like, mesh), mesh)
+    return (rep, cache_shard)
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              overrides=None, flcfg=FL_TRAIN, variant: str = None,
+              verbose: bool = True):
+    """Returns (roofline, compiled). Raises on lowering/compile failure."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(mesh.devices.size)
+    shape = SHAPES[shape_name]
+    cfg = adapt_config(get_config(arch), shape)
+    if variant:
+        from repro.launch.variants import apply_variant
+        cfg, var_overrides = apply_variant(variant, cfg, data_axes(mesh))
+        overrides = {**(var_overrides or {}), **(overrides or {})} or None
+    program = build_program(cfg, shape, flcfg)
+
+    with mesh:
+        in_sh = _in_shardings(program, mesh, overrides)
+        out_sh = _out_shardings(program, mesh, in_sh, shape.kind)
+        jitted = jax.jit(program.fn, in_shardings=in_sh, out_shardings=out_sh)
+        t0 = time.time()
+        lowered = jitted.lower(*program.args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    # Loop-aware totals (while bodies × trip counts) — primary numbers;
+    # cost_analysis() counts each while body once (verified) and is kept
+    # only as the raw cross-check.
+    totals = hloparse.analyze(hlo)
+
+    mem_dict = None
+    if mem is not None:
+        mem_dict = {a: float(getattr(mem, a)) for a in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes") if hasattr(mem, a)}
+
+    roof = rl.Roofline(
+        arch=arch, shape=shape_name,
+        mesh="2x16x16" if multi_pod else "16x16",
+        chips=chips,
+        flops_per_device=totals.flops,
+        bytes_per_device=totals.hbm_bytes,
+        collective_per_device=totals.collective_bytes,
+        collective_by_type=totals.collective_by_type,
+        model_flops=rl.model_flops_for(cfg, shape, flcfg),
+        memory_per_device=mem_dict,
+        xla_cost_raw={"flops": float(cost.get("flops", 0.0)),
+                      "bytes_accessed": float(cost.get("bytes accessed", 0.0))},
+    )
+    if verbose:
+        print(f"[{arch} × {shape_name} × {roof.mesh}] "
+              f"lower {t1-t0:.1f}s compile {t2-t1:.1f}s")
+        print("  memory_analysis:", mem_dict)
+        print(f"  cost: flops/dev={roof.flops_per_device:.3e} "
+              f"bytes/dev={roof.bytes_per_device:.3e} "
+              f"coll/dev={roof.collective_per_device:.3e}")
+        print(f"  roofline: compute={roof.t_compute*1e3:.2f}ms "
+              f"memory={roof.t_memory*1e3:.2f}ms "
+              f"collective={roof.t_collective*1e3:.2f}ms "
+              f"dominant={roof.dominant} useful={roof.useful_ratio:.3f}")
+    return roof, compiled
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default=None,
+                    help="named perf variant from launch/variants.py")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    combos = ([(a, s) for a in ARCH_IDS for s in SHAPES]
+              if args.all else [(args.arch, args.shape)])
+    failures = []
+    for arch, shape_name in combos:
+        tag = f"{arch}_{shape_name}_{'2x16x16' if args.multi_pod else '16x16'}"
+        if args.variant:
+            tag += f"__{args.variant}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"skip {tag} (artifact exists)")
+            continue
+        try:
+            roof, _ = lower_one(arch, shape_name, multi_pod=args.multi_pod,
+                                variant=args.variant)
+            if args.variant:
+                roof.mesh += f"__{args.variant}"
+            roof.save(path)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures.append((tag, repr(e)))
+            print(f"FAIL {tag}: {e}")
+            traceback.print_exc()
+    if failures:
+        print("FAILURES:", json.dumps(failures, indent=2))
+        return 1
+    print("all dry-runs passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,110 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run profiler: rank the heaviest (loop-weighted) collectives and HBM
+consumers in a compiled (arch × shape) program, with JAX source attribution
+from HLO metadata. This is the 'profile' step of the §Perf hypothesis loop
+(no real hardware — the lowered IR is the profile).
+
+    PYTHONPATH=src python -m repro.launch.inspect --arch mamba2-780m \
+        --shape prefill_32k [--variant X] [--top 15]
+"""
+import argparse
+import re
+
+from repro.launch import hloparse
+
+
+def top_collectives(hlo: str, top: int = 15):
+    comps = hloparse.parse_module(hlo)
+    weights = hloparse.computation_weights(comps)
+    rows = []
+    for cname, comp in comps.items():
+        if isinstance(comp, str):
+            continue
+        w = weights.get(cname, 0.0)
+        if w == 0:
+            continue
+        for ins in comp.instrs:
+            for cop in hloparse.COLLECTIVES:
+                if ins.op.startswith(cop) and not ins.op.endswith("-done"):
+                    m = re.search(r'op_name="([^"]*)"', ins.text)
+                    rows.append((w * ins.result_bytes, cop, w,
+                                 ins.result_bytes,
+                                 (m.group(1) if m else "?")[:110]))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def top_hbm(hlo: str, top: int = 15):
+    comps = hloparse.parse_module(hlo)
+    weights = hloparse.computation_weights(comps)
+    rows = []
+    for cname, comp in comps.items():
+        if isinstance(comp, str) or comp.is_fusion_body:
+            continue
+        w = weights.get(cname, 0.0)
+        if w == 0:
+            continue
+        symtab = {i.name: i for i in comp.instrs}
+        for ins in comp.instrs:
+            if ins.op in hloparse._SKIP_BYTES_OPS:
+                continue
+            opnd = sum(symtab[o].result_bytes for o in ins.operands
+                       if o in symtab)
+            m = re.search(r'op_name="([^"]*)"', ins.text)
+            rows.append((w * (ins.result_bytes + opnd), ins.op, w,
+                         (m.group(1) if m else "?")[:110]))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def top_flops(hlo: str, top: int = 15):
+    comps = hloparse.parse_module(hlo)
+    weights = hloparse.computation_weights(comps)
+    rows = []
+    for cname, comp in comps.items():
+        if isinstance(comp, str):
+            continue
+        w = weights.get(cname, 0.0)
+        if w == 0:
+            continue
+        symtab = {i.name: i for i in comp.instrs}
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                f = hloparse._dot_flops(ins, symtab)
+                m = re.search(r'op_name="([^"]*)"', ins.text)
+                rows.append((w * f, w, f,
+                             (m.group(1) if m else "?")[:110]))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_one
+    roof, compiled = lower_one(args.arch, args.shape,
+                               multi_pod=args.multi_pod,
+                               variant=args.variant, verbose=True)
+    hlo = compiled.as_text()
+    print("\n=== top FLOP contributors (loop-weighted, per device) ===")
+    for f, w, raw, src in top_flops(hlo, args.top):
+        print(f"{f/1e12:10.2f}TF  w={w:8.0f} raw={raw/1e9:10.2f}GF  {src}")
+    print("\n=== top collectives (loop-weighted bytes/device) ===")
+    for b, op, w, raw, src in top_collectives(hlo, args.top):
+        print(f"{b/1e9:10.2f}GB  {op:20s} w={w:8.0f} raw={raw/1e6:8.1f}MB  {src}")
+    print("\n=== top HBM consumers (loop-weighted operand+result bytes) ===")
+    for b, op, w, src in top_hbm(hlo, args.top):
+        print(f"{b/1e9:10.2f}GB  {op:20s} w={w:8.0f}  {src}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh builders.
+
+Functions, not module constants: importing this module never touches JAX
+device state (the dry-run sets XLA_FLAGS before any JAX import).
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the 'pod' axis joins the
+data/FSDP product so cross-pod traffic is gradient/param-aggregation only.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes forming the batch/FSDP product ('pod' included when present)."""
+    names = mesh.axis_names
+    return tuple(a for a in names if a != "model")
+
+
+def make_host_mesh(data: int = 2, model: int = 2):
+    """Tiny mesh over host devices for CI-scale distribution tests."""
+    return jax.make_mesh((data, model), ("data", "model"))

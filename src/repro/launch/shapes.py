@@ -1,0 +1,172 @@
+"""Assigned input shapes → lowerable programs with ShapeDtypeStruct inputs.
+
+Four shapes (assignment):
+    train_4k     seq=4 096   global_batch=256   -> fl_round (FedLDF training)
+    prefill_32k  seq=32 768  global_batch=32    -> prefill
+    decode_32k   seq=32 768  global_batch=128   -> serve_step (1 new token)
+    long_500k    seq=524 288 global_batch=1     -> serve_step, sub-quadratic
+
+``long_500k`` policy (DESIGN.md §7): SSM runs natively (recurrent state);
+hybrid + all attention archs use the sliding-window variant (window 8 192 —
+for hymba this mirrors the real model's SW layers). No arch is skipped.
+
+FL round geometry for train_4k: K=8 sequential clients × 32 local batch
+(cross-silo; global_batch = 256), FedLDF top-n=2 (n/K = 0.25 ≈ paper's 0.2).
+
+Audio (enc-dec) sequence placement: ``seq`` is the *audio frame* length; the
+decoder side uses min(seq, 1024) text tokens (train/prefill) and a 4 096-
+frame cross-attention cache at decode. Recorded in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.federated.server import FLConfig, build_round_scan
+from repro.core.units import UnitMap
+from repro.models import decode as dec
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig, dtype_of
+
+Pytree = Any
+
+SLIDING_WINDOW_LONG = 8192
+AUDIO_DEC_LEN = 1024
+AUDIO_DEC_CROSS = 4096
+VLM_PATCHES = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+FL_TRAIN = FLConfig(algo="fedldf", num_clients=64, clients_per_round=8,
+                    top_n=2, local_steps=1, lr=0.02, mode="scan",
+                    batch_per_client=32)
+
+
+def adapt_config(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    """Variant selection per shape (sliding window for long-context)."""
+    if (shape.name == "long_500k" and cfg.family != "ssm"
+            and not cfg.sliding_window):
+        cfg = dataclasses.replace(cfg, sliding_window=SLIDING_WINDOW_LONG)
+    return cfg
+
+
+def params_struct(cfg: ModelConfig) -> Pytree:
+    """ShapeDtypeStruct tree of the model params (no allocation)."""
+    return jax.eval_shape(
+        lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class Program:
+    """A lowerable (fn, example-args) bundle."""
+    fn: Callable
+    args: tuple            # ShapeDtypeStructs (pytrees)
+    arg_kinds: tuple       # 'params' | 'batch' | 'cache' | 'scalar' per arg
+    flcfg: Optional[FLConfig] = None
+
+
+def build_program(cfg: ModelConfig, shape: ShapeSpec,
+                  flcfg: FLConfig = FL_TRAIN) -> Program:
+    cfg = adapt_config(cfg, shape)
+    pstruct = params_struct(cfg)
+    cdt = dtype_of(cfg.compute_dtype)
+
+    if shape.kind == "train":
+        k = flcfg.clients_per_round
+        b = shape.global_batch // k
+        seq = shape.seq
+        if cfg.is_encdec:
+            dlen = min(seq, AUDIO_DEC_LEN)
+            batch = {
+                "tokens": _sds((k, b, dlen), jnp.int32),
+                "labels": _sds((k, b, dlen), jnp.int32),
+                "enc_inputs": _sds((k, b, seq, cfg.frontend_dim), cdt),
+            }
+        elif cfg.family == "vlm":
+            batch = {
+                "tokens": _sds((k, b, seq), jnp.int32),
+                "labels": _sds((k, b, seq), jnp.int32),
+                "embeddings": _sds((k, b, VLM_PATCHES, cfg.frontend_dim), cdt),
+            }
+        else:
+            batch = {
+                "tokens": _sds((k, b, seq), jnp.int32),
+                "labels": _sds((k, b, seq), jnp.int32),
+            }
+        umap = UnitMap.build(pstruct)
+        loss_fn = functools.partial(_lm_loss, cfg)
+        round_fn = build_round_scan(loss_fn, umap, flcfg)
+        args = (pstruct, batch, _sds((k,), jnp.float32),
+                _sds((2,), jnp.uint32))
+        return Program(round_fn, args, ("params", "batch", "scalar", "scalar"),
+                       flcfg)
+
+    if shape.kind == "prefill":
+        b, seq = shape.global_batch, shape.seq
+        kwargs_struct = {}
+        if cfg.is_encdec:
+            tokens = _sds((b, min(seq, AUDIO_DEC_LEN)), jnp.int32)
+            kwargs_struct["enc_inputs"] = _sds((b, seq, cfg.frontend_dim), cdt)
+        elif cfg.family == "vlm":
+            tokens = _sds((b, seq), jnp.int32)
+            kwargs_struct["embeddings"] = _sds((b, VLM_PATCHES,
+                                                cfg.frontend_dim), cdt)
+        else:
+            tokens = _sds((b, seq), jnp.int32)
+
+        if cfg.is_encdec:
+            def fn(params, tokens, enc_inputs):
+                return dec.prefill(params, cfg, tokens, enc_inputs=enc_inputs)
+            args = (pstruct, tokens, kwargs_struct["enc_inputs"])
+            kinds = ("params", "batch", "batch")
+        elif cfg.family == "vlm":
+            def fn(params, tokens, embeddings):
+                return dec.prefill(params, cfg, tokens, embeddings=embeddings)
+            args = (pstruct, tokens, kwargs_struct["embeddings"])
+            kinds = ("params", "batch", "batch")
+        else:
+            def fn(params, tokens):
+                return dec.prefill(params, cfg, tokens)
+            args = (pstruct, tokens)
+            kinds = ("params", "batch")
+        return Program(fn, args, kinds)
+
+    # decode
+    b, seq = shape.global_batch, shape.seq
+    enc_len = AUDIO_DEC_CROSS if cfg.is_encdec else 0
+    cache_struct = jax.eval_shape(
+        lambda: dec.init_cache(cfg, b, seq, enc_len=enc_len))
+    tokens = _sds((b, 1), jnp.int32)
+
+    def fn(params, tokens, cache):
+        return dec.decode_step(params, cfg, tokens, cache)
+
+    return Program(fn, (pstruct, tokens, cache_struct),
+                   ("params", "batch", "cache"))
+
+
+def _lm_loss(cfg: ModelConfig, params, batch):
+    return tf.lm_loss(params, cfg, batch)

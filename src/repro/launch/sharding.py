@@ -1,0 +1,140 @@
+"""Auto-sharding policy (divisibility-driven, Megatron/FSDP-style defaults).
+
+For every parameter/cache leaf we assign:
+- the largest divisible non-leading dim -> 'model' (tensor parallel),
+- the next largest divisible dim       -> the data/FSDP axis product
+  ('data', or ('pod','data') multi-pod),
+- everything else replicated.
+
+Leaves under stacked top-level keys (blocks/enc_blocks) skip their leading
+depth dim (it is scanned, never sharded). 1-D leaves (norm scales, biases)
+are replicated. When a dim does not divide the axis size the policy falls
+back rather than failing — this is what lets 25-head/28-head architectures
+lower cleanly with MLP-only tensor parallelism (DESIGN.md §5).
+
+``overrides`` allows per-path-regex PartitionSpec pinning — the hillclimb
+lever used in §Perf.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+Pytree = Any
+
+STACKED_TOPKEYS = ("blocks", "enc_blocks", "dec_blocks")
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def auto_spec(shape: tuple[int, ...], mesh: Mesh, *,
+              skip_leading: bool = False,
+              model_axis: str = "model") -> P:
+    """Generic two-level sharding of one array shape."""
+    daxes = data_axes(mesh)
+    daxis = daxes if len(daxes) > 1 else daxes[0]
+    start = 1 if skip_leading else 0
+    dims = list(range(start, len(shape)))
+    spec: list = [None] * len(shape)
+
+    def pick(axis, exclude: set[int]) -> Optional[int]:
+        size = _axis_size(mesh, axis)
+        cands = [d for d in dims if d not in exclude
+                 and shape[d] >= size and shape[d] % size == 0]
+        if not cands:
+            return None
+        return max(cands, key=lambda d: (shape[d], d))
+
+    dm = pick(model_axis, set())
+    if dm is not None:
+        spec[dm] = model_axis
+    dd = pick(daxis, {dm} if dm is not None else set())
+    if dd is not None:
+        spec[dd] = daxis
+    return P(*spec)
+
+
+def _iter_paths(tree: Pytree, prefix: str = ""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _iter_paths(tree[k], f"{prefix}{k}/")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _iter_paths(v, f"{prefix}#{i}/")
+    else:
+        yield prefix.rstrip("/"), tree
+
+
+def param_specs(params_shape: Pytree, mesh: Mesh,
+                overrides: Optional[dict[str, P]] = None) -> Pytree:
+    """PartitionSpec pytree for a parameter (or cache) shape tree.
+
+    ``params_shape`` leaves: ShapeDtypeStruct or arrays.
+    ``overrides``: {path-regex: PartitionSpec} applied first-match.
+    """
+    overrides = overrides or {}
+
+    def assign(path: str, leaf) -> P:
+        for pat, spec in overrides.items():
+            if re.search(pat, path):
+                return spec
+        shape = leaf.shape
+        if len(shape) <= 1:
+            return P()
+        top = path.split("/", 1)[0]
+        skip = top in STACKED_TOPKEYS
+        if len(shape) - (1 if skip else 0) < 1:
+            return P()
+        return auto_spec(shape, mesh, skip_leading=skip)
+
+    flat = dict(_iter_paths(params_shape))
+    specs = {path: assign(path, leaf) for path, leaf in flat.items()}
+
+    def rebuild(tree: Pytree, prefix: str = "") -> Pytree:
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            t = type(tree)
+            return t(rebuild(v, f"{prefix}#{i}/") for i, v in enumerate(tree))
+        return specs[prefix.rstrip("/")]
+
+    return rebuild(params_shape)
+
+
+def to_named(spec_tree: Pytree, mesh: Mesh) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(batch_shape: Pytree, mesh: Mesh, *,
+                client_leading: bool = False) -> Pytree:
+    """Shard the batch dim over the data axes.
+
+    Leaves: (K, b, ...) when client_leading (FL round batch; the per-client
+    batch dim b is sharded) or (b, ...) otherwise. Falls back to replication
+    when b does not divide the axis product (e.g. long_500k's batch=1).
+    """
+    daxes = data_axes(mesh)
+    daxis = daxes if len(daxes) > 1 else daxes[0]
+    dsize = _axis_size(mesh, daxis)
+    bdim = 1 if client_leading else 0
+
+    def assign(leaf) -> P:
+        shape = leaf.shape
+        if len(shape) <= bdim or shape[bdim] % dsize or shape[bdim] < dsize:
+            return P()
+        spec: list = [None] * len(shape)
+        spec[bdim] = daxis
+        return P(*spec)
+
+    return jax.tree.map(assign, batch_shape)

@@ -1,0 +1,6 @@
+"""Model zoo: transformer families + VGG-9 (paper's model)."""
+from repro.models import attention, cnn, config, decode, layers, moe, ssm, transformer
+from repro.models.config import ModelConfig, dtype_of
+
+__all__ = ["attention", "cnn", "config", "decode", "layers", "moe", "ssm",
+           "transformer", "ModelConfig", "dtype_of"]

@@ -1,0 +1,103 @@
+"""VGG-9 CNN — the paper's experimental model (§III-A).
+
+8 conv layers + 1 FC, normalisation + max-pooling following conv pairs
+(32×32 → 2×2 spatial). Params are organised one top-level key per layer so
+the FedLDF :class:`UnitMap` yields exactly the paper's L = 9 layer units.
+
+Note on BN: FL with running BN statistics is ill-defined under parameter
+averaging; we use batch-statistics normalisation with learned scale/bias in
+both train and eval (common in FL simulations), recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class VGGConfig:
+    name: str = "vgg9-cifar10"
+    channels: tuple[int, ...] = (64, 64, 128, 128, 256, 256, 512, 512)
+    pool_after: tuple[int, ...] = (1, 3, 5, 7)   # conv indices
+    num_classes: int = 10
+    image_size: int = 32
+    in_channels: int = 3
+    source: str = "paper §III-A (VGG-9: 8 conv + 1 FC)"
+
+    @property
+    def num_layers(self) -> int:  # L in the paper
+        return len(self.channels) + 1
+
+    def reduced(self) -> "VGGConfig":
+        return dataclasses.replace(
+            self, name=self.name + "-reduced",
+            channels=(8, 8, 16, 16), pool_after=(1, 3))
+
+    def fc_in(self) -> int:
+        spatial = self.image_size // (2 ** len(self.pool_after))
+        return spatial * spatial * self.channels[-1]
+
+
+def init_params(key, cfg: VGGConfig) -> Pytree:
+    params: Pytree = {}
+    cin = cfg.in_channels
+    keys = jax.random.split(key, len(cfg.channels) + 1)
+    for i, cout in enumerate(cfg.channels):
+        fan_in = 3 * 3 * cin
+        params[f"conv{i}"] = {
+            "w": (jax.random.normal(keys[i], (3, 3, cin, cout))
+                  * np.sqrt(2.0 / fan_in)).astype(jnp.float32),
+            "b": jnp.zeros((cout,), jnp.float32),
+            "scale": jnp.ones((cout,), jnp.float32),
+            "bias": jnp.zeros((cout,), jnp.float32),
+        }
+        cin = cout
+    params["fc"] = {
+        "w": (jax.random.normal(keys[-1], (cfg.fc_in(), cfg.num_classes))
+              * np.sqrt(1.0 / cfg.fc_in())).astype(jnp.float32),
+        "b": jnp.zeros((cfg.num_classes,), jnp.float32),
+    }
+    return params
+
+
+def _batch_norm(x, scale, bias, eps=1e-5):
+    mean = x.mean(axis=(0, 1, 2), keepdims=True)
+    var = x.var(axis=(0, 1, 2), keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def forward(params: Pytree, cfg: VGGConfig, images: jnp.ndarray):
+    """images: (B, H, W, C) float32 -> logits (B, num_classes)."""
+    x = images
+    for i in range(len(cfg.channels)):
+        p = params[f"conv{i}"]
+        x = jax.lax.conv_general_dilated(
+            x, p["w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = _batch_norm(x + p["b"], p["scale"], p["bias"])
+        x = jax.nn.relu(x)
+        if i in cfg.pool_after:
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                "VALID")
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["fc"]["w"] + params["fc"]["b"]
+
+
+def classify_loss(params: Pytree, cfg: VGGConfig, batch: dict):
+    """batch: {images: (B,H,W,C), labels: (B,)}."""
+    logits = forward(params, cfg, batch["images"])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)
+    return nll.mean()
+
+
+def accuracy(params: Pytree, cfg: VGGConfig, batch: dict):
+    logits = forward(params, cfg, batch["images"])
+    return (jnp.argmax(logits, -1) == batch["labels"]).mean()

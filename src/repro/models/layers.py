@@ -1,0 +1,47 @@
+"""Shared neural-net building blocks (pure JAX, functional params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig, dtype_of
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    s = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * s).astype(dtype)
+
+
+def init_embed(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP used by the Qwen/Llama/DeepSeek family."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
+    dt = dtype_of(cfg.param_dtype)
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(k1, cfg.d_model, f, dt),
+        "w_up": init_dense(k2, cfg.d_model, f, dt),
+        "w_down": init_dense(k3, f, cfg.d_model, dt),
+    }
+
+
+def mlp_fwd(p, x):
+    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"])

@@ -1,0 +1,90 @@
+"""Mixture-of-Experts layer (llama4-style top-1 and deepseek-style
+shared+routed top-k), GShard/GSPMD-friendly.
+
+Dispatch is capacity-based: tokens are scattered into an (E, C, D) buffer
+(positions via a cumulative-sum over the routing one-hot), expert FFNs run as
+one batched einsum ``ecd,edf->ecf`` — so compiled FLOPs reflect *active*
+parameters (top-k), not all experts, and the expert dimension shards cleanly
+over the 'model' mesh axis (the token→expert reshard is the all-to-all).
+Overflow beyond capacity is dropped (combine weights renormalised), the
+standard trade for static shapes on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, dtype_of
+from repro.models.layers import init_dense, init_mlp, mlp_fwd
+
+
+def init_moe(key, cfg: ModelConfig):
+    dt = dtype_of(cfg.param_dtype)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": init_dense(ks[0], d, e, jnp.float32),  # routing in fp32
+        "w_gate": (jax.random.normal(ks[1], (e, d, f)) / d**0.5).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) / d**0.5).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (e, f, d)) / f**0.5).astype(dt),
+    }
+    if cfg.num_shared_experts > 0:
+        p["shared"] = init_mlp(ks[4], cfg,
+                               d_ff=cfg.num_shared_experts * cfg.moe_d_ff)
+    return p
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    cap = int(tokens * cfg.moe_top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(cap, cfg.moe_top_k)
+
+
+def moe_fwd(p, x: jnp.ndarray, cfg: ModelConfig):
+    """x: (B, S, D) -> (B, S, D). Returns (out, aux) with load-balance loss."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.moe_top_k
+    cap = _capacity(t, cfg)
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    gate_vals, eidx = jax.lax.top_k(probs, k)                   # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                 # renormalise
+
+    # Position of each (token, choice) within its expert's capacity buffer.
+    onehot = jax.nn.one_hot(eidx, e, dtype=jnp.int32)           # (T, k, E)
+    flat = onehot.reshape(t * k, e)
+    pos_in_e = jnp.cumsum(flat, axis=0) - flat                  # (T*k, E)
+    pos = (pos_in_e * flat).sum(-1).reshape(t, k)               # (T, k)
+    keep = pos < cap
+    gate_vals = gate_vals * keep
+
+    # Scatter tokens to (E, C, D).
+    buf = jnp.zeros((e, cap, d), dtype=x.dtype)
+    eflat = eidx.reshape(-1)
+    pflat = jnp.where(keep.reshape(-1), pos.reshape(-1), cap)   # dropped -> OOB
+    src = jnp.repeat(xt, k, axis=0)
+    buf = buf.at[eflat, pflat].set(src, mode="drop")
+
+    # Expert FFNs (SwiGLU), batched over E — shards over 'model'.
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])        # (E, C, D)
+
+    # Gather back and combine with gate values.
+    gathered = out_buf[eflat, jnp.minimum(pflat, cap - 1)]      # (T*k, D)
+    gathered = gathered.reshape(t, k, d) * gate_vals[..., None].astype(x.dtype)
+    out = gathered.sum(axis=1)
+
+    if cfg.num_shared_experts > 0:
+        out = out + mlp_fwd(p["shared"], xt)
+
+    # Switch-style load-balance aux loss.
+    me = probs.mean(axis=0)                                     # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[eidx.reshape(-1)].add(
+        1.0 / (t * k))
+    aux = e * jnp.sum(me * ce)
+    return out.reshape(b, s, d), aux

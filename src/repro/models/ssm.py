@@ -1,0 +1,177 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Chunked SSD: within a chunk of length Q the recurrence is computed in its
+quadratic "attention-like" dual form (MXU-friendly einsums); across chunks a
+linear recurrence carries the (H, N, P) state. Decode is the O(1) recurrent
+update — this is what makes the ``long_500k`` shape natural for SSM/hybrid
+architectures (constant state instead of a 524k-entry KV cache).
+
+Layout: G = 1 B/C group (Mamba-2 default "multi-value attention" analogue);
+heads H = expand·d_model / head_dim P; state size N per head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, dtype_of
+from repro.models.layers import init_dense, rms_norm
+
+
+def init_ssm(key, cfg: ModelConfig):
+    dt = dtype_of(cfg.param_dtype)
+    d, di, n, h, w = (cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_conv_width)
+    ks = jax.random.split(key, 4)
+    conv_ch = di + 2 * n
+    return {
+        "in_proj": init_dense(ks[0], d, 2 * di + 2 * n + h, dt),
+        "conv_w": (jax.random.normal(ks[1], (w, conv_ch)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.zeros((h,), jnp.float32),           # A = -exp(A_log) = -1
+        "D_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),    # softplus ~0.12
+        "norm_scale": jnp.ones((di,), dt),
+        "out_proj": init_dense(ks[2], di, d, dt),
+    }
+
+
+def _split_proj(p, x, cfg: ModelConfig):
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = jnp.einsum("...d,df->...f", x, p["in_proj"])
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    return z, xbc, dt_raw
+
+
+def _causal_conv(p, xbc, cfg: ModelConfig):
+    """Depthwise causal conv over (B, S, C') channels."""
+    w = cfg.ssm_conv_width
+    kernel = p["conv_w"][:, None, :]                     # (W, 1, C')
+    out = jax.lax.conv_general_dilated(
+        xbc, kernel.astype(xbc.dtype),
+        window_strides=(1,), padding=[(w - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=xbc.shape[-1])
+    return jax.nn.silu((out + p["conv_b"]).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def ssd_fwd(p, xin: jnp.ndarray, cfg: ModelConfig,
+            return_cache: bool = False):
+    """Full-sequence chunked SSD. xin: (B, S, D) -> (B, S, D)[, cache]."""
+    bsz, s, _ = xin.shape
+    di, n, h, pdim, q = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads,
+                         cfg.ssm_head_dim, cfg.ssm_chunk)
+    nc = -(-s // q)
+    pad = nc * q - s
+
+    z, xbc_raw, dt_raw = _split_proj(p, xin, cfg)
+    xbc = _causal_conv(p, xbc_raw, cfg)
+    x, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)   # (B,S,di/n/n)
+
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        dt_raw = jnp.pad(dt_raw, ((0, 0), (0, pad), (0, 0)))
+
+    xh = x.reshape(bsz, nc, q, h, pdim).astype(jnp.float32)
+    bc = bmat.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = cmat.reshape(bsz, nc, q, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.reshape(bsz, nc, q, h).astype(jnp.float32)
+                         + p["dt_bias"])
+    if pad:
+        # Padded positions must not decay the state: force dt -> 0 there.
+        valid = (jnp.arange(nc * q) < s).reshape(1, nc, q, 1)
+        dt = dt * valid
+    a = -jnp.exp(p["A_log"])                                 # (H,)
+    da = dt * a                                              # (B,NC,Q,H)
+    cum = jnp.cumsum(da, axis=2)                             # (B,NC,Q,H)
+
+    # Intra-chunk (dual quadratic form).
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)               # (B,NC,Q,Q)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    causal = jnp.tril(jnp.ones((q, q), dtype=bool))
+    decay = jnp.where(causal[None, None, :, :, None], decay, 0.0)
+    y_intra = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp",
+                         cb, decay, dt, xh)
+
+    # Chunk summaries -> inter-chunk recurrence.
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)             # (B,NC,Q,H)
+    s_chunk = jnp.einsum("bcjh,bcjn,bcjhp->bchnp",
+                         decay_end * dt, bc, xh)             # (B,NC,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (B,NC,H)
+
+    def body(state, xs):
+        sc, cd = xs                                          # (B,H,N,P),(B,H)
+        y_state = state                                      # state BEFORE chunk
+        state = cd[..., None, None] * state + sc
+        return state, y_state
+
+    s_t = s_chunk.transpose(1, 0, 2, 3, 4)                   # (NC,B,H,N,P)
+    cd_t = chunk_decay.transpose(1, 0, 2)                    # (NC,B,H)
+    state0 = jnp.zeros((bsz, h, n, pdim), jnp.float32)
+    final_state, states = jax.lax.scan(body, state0, (s_t, cd_t))
+    states = states.transpose(1, 0, 2, 3, 4)                 # (B,NC,H,N,P)
+
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp",
+                         cc, states, jnp.exp(cum))
+    y = y_intra + y_inter + p["D_skip"][None, None, None, :, None] * xh
+    y = y.reshape(bsz, nc * q, di)[:, :s]
+
+    z = z.astype(jnp.float32)
+    y = rms_norm((y * jax.nn.silu(z)).astype(xin.dtype), p["norm_scale"])
+    out = jnp.einsum("...f,fd->...d", y, p["out_proj"].astype(y.dtype))
+    if not return_cache:
+        return out
+    # Recurrent cache: final SSM state + raw (pre-conv) xbc tail.
+    w = cfg.ssm_conv_width
+    tail = xbc_raw[:, -(w - 1):, :]
+    if s < w - 1:
+        tail = jnp.pad(xbc_raw, ((0, 0), (w - 1 - s, 0), (0, 0)))
+    return out, {"conv": tail, "state": final_state}
+
+
+# ----------------------------------------------------------------------
+# Decode (recurrent) path
+# ----------------------------------------------------------------------
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    """Per-layer recurrent cache: conv tail + SSM state."""
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1,
+                           cfg.ssm_d_inner + 2 * cfg.ssm_state), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                            cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def ssd_step(p, xin: jnp.ndarray, cache: dict, cfg: ModelConfig):
+    """Single-token recurrent update. xin: (B, 1, D) -> (B, 1, D), cache'."""
+    bsz = xin.shape[0]
+    di, n, h, pdim = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads,
+                      cfg.ssm_head_dim)
+    z, xbc, dt_raw = _split_proj(p, xin[:, 0, :], cfg)       # (B, ...)
+
+    # conv with cached tail
+    hist = jnp.concatenate([cache["conv"],
+                            xbc[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    xbc_act = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:, :]
+
+    x, bvec, cvec = jnp.split(xbc_act, [di, di + n], axis=-1)
+    xh = x.reshape(bsz, h, pdim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * a)                                     # (B,H)
+
+    state = (da[..., None, None] * cache["state"]
+             + jnp.einsum("bh,bn,bhp->bhnp", dt, bvec, xh))
+    y = jnp.einsum("bn,bhnp->bhp", cvec, state)
+    y = y + p["D_skip"][None, :, None] * xh
+    y = y.reshape(bsz, 1, di)
+
+    z = jax.nn.silu(z.astype(jnp.float32))[:, None, :]
+    y = rms_norm((y * z).astype(xin.dtype), p["norm_scale"])
+    out = jnp.einsum("...f,fd->...d", y, p["out_proj"].astype(y.dtype))
+    return out, {"conv": new_conv, "state": state}

@@ -1,0 +1,4 @@
+"""Optimizers (pure JAX, functional)."""
+from repro.optim.opt import adamw, sgd
+
+__all__ = ["sgd", "adamw"]

@@ -1,0 +1,79 @@
+"""SGD(+momentum) and AdamW as (init, update) pairs over pytrees.
+
+The paper's ClientUpdate (Algorithm 1 line 14) is one plain SGD step; we keep
+momentum/AdamW for the beyond-paper experiments (local adaptivity) and for
+the serving-model pre-training example.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree], tuple[Pytree, Pytree]]
+    # update(grads, state, params) -> (new_params, new_state)
+
+
+def sgd(lr: float, momentum: float = 0.0,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(lambda l: jnp.zeros_like(l, dtype=jnp.float32),
+                            params)
+
+    def update(grads, state, params):
+        if weight_decay:
+            grads = jax.tree.map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype),
+                grads, params)
+        if momentum == 0.0:
+            new_params = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new_params, ()
+        new_state = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state, grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+            params, new_state)
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda: jax.tree.map(
+            lambda l: jnp.zeros_like(l, dtype=jnp.float32), params)
+        return {"m": zeros(), "v": zeros(), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def step(p, m_, v_):
+            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        return (jax.tree.map(step, params, m, v),
+                {"m": m, "v": v, "t": t})
+
+    return Optimizer(init, update)

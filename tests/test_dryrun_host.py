@@ -1,0 +1,63 @@
+"""Dry-run pipeline integration on the single host device.
+
+Exercises the full lower+compile path (program building, in/out shardings,
+roofline extraction) on a 1×1 mesh with reduced configs — the 512-device
+production pass runs in its own process (launch/dryrun.py); this test
+guards the machinery itself in CI.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.launch import hloparse
+from repro.launch.mesh import make_host_mesh
+from repro.launch.shapes import ShapeSpec, build_program, FL_TRAIN
+from repro.launch.sharding import batch_specs, param_specs, to_named
+
+SMALL_SHAPES = {
+    "train": ShapeSpec("train_small", "train", 32, 8),
+    "prefill": ShapeSpec("prefill_small", "prefill", 64, 2),
+    "decode": ShapeSpec("decode_small", "decode", 64, 2),
+}
+
+
+def _reduced(arch):
+    return dataclasses.replace(get_config(arch).reduced(),
+                               param_dtype="float32",
+                               compute_dtype="float32")
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "mamba2-780m",
+                                  "deepseek-moe-16b",
+                                  "seamless-m4t-large-v2"])
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+def test_lower_compile_and_roofline(arch, kind):
+    cfg = _reduced(arch)
+    shape = SMALL_SHAPES[kind]
+    flcfg = dataclasses.replace(FL_TRAIN, clients_per_round=2, top_n=1)
+    program = build_program(cfg, shape, flcfg)
+    mesh = make_host_mesh(1, 1)
+    with mesh:
+        in_sh = []
+        for arg, k in zip(program.args, program.arg_kinds):
+            if k in ("params", "cache"):
+                in_sh.append(to_named(param_specs(arg, mesh), mesh))
+            elif k == "batch":
+                in_sh.append(to_named(batch_specs(
+                    arg, mesh, client_leading=program.flcfg is not None),
+                    mesh))
+            else:
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                in_sh.append(jax.tree.map(
+                    lambda _: NamedSharding(mesh, P()), arg))
+        compiled = jax.jit(program.fn,
+                           in_shardings=tuple(in_sh)).lower(
+            *program.args).compile()
+    totals = hloparse.analyze(compiled.as_text())
+    assert totals.flops > 0
+    assert totals.hbm_bytes > 0
+    mem = compiled.memory_analysis()
+    assert mem is None or mem.temp_size_in_bytes >= 0

@@ -1,0 +1,83 @@
+"""Pallas flash-attention kernel vs oracle: shape/dtype/mask sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention, ref_attention
+
+CASES = [
+    # (bh, bkv, sq, skv, hd, causal, window, tq, tk)
+    (4, 2, 64, 64, 32, True, 0, 16, 32),
+    (2, 2, 100, 100, 32, True, 0, 32, 32),
+    (6, 2, 48, 48, 16, True, 7, 16, 16),
+    (2, 1, 33, 65, 64, False, 0, 16, 32),
+    (8, 1, 40, 40, 128, True, 0, 8, 128),    # GQA group 8, MXU-width hd
+]
+
+
+@pytest.mark.parametrize("case", CASES, ids=[str(i) for i in range(len(CASES))])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+def test_flash_matches_oracle(case, dtype):
+    bh, bkv, sq, skv, hd, causal, window, tq, tk = case
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (bh, sq, hd), dtype=dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (bkv, skv, hd), dtype=dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (bkv, skv, hd), dtype=dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          tq=tq, tk=tk, interpret=True)
+    exp = ref_attention(q, k, v, causal=causal, window=window)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_tile_shape_invariance():
+    """Output must not depend on the BlockSpec tiling."""
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (2, 96, 32))
+    k = jax.random.normal(jax.random.PRNGKey(4), (2, 96, 32))
+    v = jax.random.normal(jax.random.PRNGKey(5), (2, 96, 32))
+    outs = [flash_attention(q, k, v, tq=tq, tk=tk, interpret=True)
+            for tq, tk in [(16, 16), (32, 48), (96, 96)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-6)
+
+
+def test_matches_model_attend_path():
+    """Kernel agrees with the model-level attend() used by the zoo."""
+    from repro.models import attention as attn
+    key = jax.random.PRNGKey(0)
+    b, s, h, kvh, hd = 2, 64, 4, 2, 32
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kvh, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kvh, hd))
+    pos = jnp.arange(s)
+    model_out = attn.attend(q, k, v, q_pos=pos, kv_pos=pos, causal=True)
+    # kernel layout: (B·H, S, hd) with grouped q interleaved per kv head
+    qg = q.reshape(b, s, kvh, h // kvh, hd).transpose(0, 2, 3, 1, 4) \
+        .reshape(b * h, s, hd)
+    kk = k.transpose(0, 2, 1, 3).reshape(b * kvh, s, hd)
+    vv = v.transpose(0, 2, 1, 3).reshape(b * kvh, s, hd)
+    kern = flash_attention(qg, kk, vv, causal=True, tq=16, tk=32,
+                           interpret=True)
+    kern = kern.reshape(b, kvh, h // kvh, s, hd).transpose(0, 3, 1, 2, 4) \
+        .reshape(b, s, h, hd)
+    np.testing.assert_allclose(kern, model_out, rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sq=st.integers(2, 40), skv=st.integers(2, 60),
+       seed=st.integers(0, 10**6))
+def test_flash_property_random_shapes(sq, skv, seed):
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (2, sq, 16))
+    k = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, skv, 16))
+    v = jax.random.normal(jax.random.PRNGKey(seed + 2), (2, skv, 16))
+    out = flash_attention(q, k, v, causal=False, tq=16, tk=16,
+                          interpret=True)
+    exp = ref_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-5)

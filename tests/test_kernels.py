@@ -1,0 +1,91 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes and dtypes, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import aggregate as ka
+from repro.kernels import divergence as kd
+from repro.kernels import ref
+
+SHAPES = [(1, 1), (1, 37), (4, 1000), (8, 2048), (9, 2049), (48, 5000),
+          (3, 16384), (62, 33)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_sqdiff_rowsum_matches_ref(shape, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(hash(shape) % 2**31))
+    a = jax.random.normal(k1, shape, dtype=dtype)
+    b = jax.random.normal(k2, shape, dtype=dtype)
+    out = kd.sqdiff_rowsum(a, b, interpret=True)
+    exp = ref.sqdiff_rowsum(a, b)
+    assert out.shape == (shape[0],)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(out, exp, rtol=3e-3, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_masked_accumulate_matches_ref(shape, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(7), 3)
+    acc = jax.random.normal(k1, shape, dtype=jnp.float32)
+    x = jax.random.normal(k2, shape, dtype=dtype)
+    w = jax.random.normal(k3, (shape[0],))
+    out = ka.masked_accumulate(acc, x, w, interpret=True)
+    exp = ref.masked_accumulate(acc, x, w)
+    np.testing.assert_allclose(out, exp, rtol=3e-3, atol=1e-5)
+
+
+@pytest.mark.parametrize("block_r,block_c", [(8, 128), (8, 2048), (16, 512)])
+def test_sqdiff_block_shape_invariance(block_r, block_c):
+    """Result must not depend on the BlockSpec tiling."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    a = jax.random.normal(k1, (21, 3000))
+    b = jax.random.normal(k2, (21, 3000))
+    out = kd.sqdiff_rowsum(a, b, block_r=block_r, block_c=block_c,
+                           interpret=True)
+    np.testing.assert_allclose(out, ref.sqdiff_rowsum(a, b), rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(r=st.integers(1, 17), c=st.integers(1, 300),
+       seed=st.integers(0, 2**31 - 1))
+def test_sqdiff_rowsum_property(r, c, seed):
+    """∀ shapes: kernel == Σ(a−b)² per row; zero diff → zero."""
+    k = jax.random.PRNGKey(seed)
+    a = jax.random.normal(k, (r, c))
+    out = kd.sqdiff_rowsum(a, a, interpret=True)
+    np.testing.assert_allclose(out, np.zeros(r), atol=1e-6)
+    b = a + 1.0
+    out2 = kd.sqdiff_rowsum(a, b, interpret=True)
+    np.testing.assert_allclose(out2, np.full(r, float(c)), rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(r=st.integers(1, 9), c=st.integers(1, 200),
+       w0=st.floats(-2, 2), seed=st.integers(0, 2**31 - 1))
+def test_masked_accumulate_property(r, c, w0, seed):
+    """w = 0 rows leave acc unchanged; w scales linearly."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    acc = jax.random.normal(k1, (r, c))
+    x = jax.random.normal(k2, (r, c))
+    w = jnp.full((r,), w0, dtype=jnp.float32)
+    out = ka.masked_accumulate(acc, x, w, interpret=True)
+    np.testing.assert_allclose(out, np.asarray(acc) + w0 * np.asarray(x),
+                               rtol=1e-4, atol=1e-5)
+    zero = ka.masked_accumulate(acc, x, jnp.zeros((r,)), interpret=True)
+    np.testing.assert_allclose(zero, acc, atol=1e-6)
+
+
+def test_ops_dispatch_forced_pallas(monkeypatch):
+    from repro.kernels import ops
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    a = jnp.ones((3, 100))
+    b = jnp.zeros((3, 100))
+    np.testing.assert_allclose(ops.sqdiff_rowsum(a, b), np.full(3, 100.0))
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "0")
+    np.testing.assert_allclose(ops.sqdiff_rowsum(a, b), np.full(3, 100.0))

@@ -1,0 +1,103 @@
+"""End-to-end system behaviour: the public API as a user drives it.
+
+Covers: FL training of the paper's VGG-9 (reduced) with all algorithms on a
+non-IID split; the paper's §III-A configuration; LLM-arch FL round in scan
+mode; serving round-trip through checkpointing.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.configs import get_config, vgg9_fl
+from repro.core.units import UnitMap
+from repro.data import FederatedData, dirichlet_partition, make_image_dataset
+from repro.federated import FLConfig, run_training
+from repro.models import cnn, decode, transformer as tf
+
+CFG = cnn.VGGConfig().reduced()
+
+
+def _loss(params, batch):
+    return cnn.classify_loss(params, CFG, batch)
+
+
+@pytest.fixture(scope="module")
+def fed_setup():
+    train, test = make_image_dataset(num_train=1500, num_test=300, seed=2)
+    parts = dirichlet_partition(train.ys, 10, alpha=1.0, seed=0)
+    data = FederatedData(train.xs, train.ys, parts)
+    test_batch = {"images": jnp.asarray(test.xs),
+                  "labels": jnp.asarray(test.ys)}
+    eval_fn = jax.jit(lambda p: 1.0 - cnn.accuracy(p, CFG, test_batch))
+    return data, eval_fn
+
+
+@pytest.mark.parametrize("algo", ["fedldf", "fedavg", "random", "hdfl",
+                                  "fedadp"])
+def test_all_algorithms_train(fed_setup, algo):
+    data, eval_fn = fed_setup
+    fl = FLConfig(algo=algo, num_clients=10, clients_per_round=5, top_n=2,
+                  lr=0.08, mode="vmap", batch_per_client=16,
+                  fedadp_keep=0.4)
+    params = cnn.init_params(jax.random.PRNGKey(0), CFG)
+    params, log = run_training(params, _loss, data, fl, rounds=6,
+                               eval_fn=eval_fn, eval_every=5, seed=0)
+    assert all(np.isfinite(l) for l in log.losses)
+    err = log.test_errors[-1][1]
+    assert 0.0 <= err <= 1.0
+    if algo in ("fedldf", "random"):
+        assert log.meter.savings_frac > 0.5
+
+
+def test_paper_fl_config_matches_section_III():
+    fl = vgg9_fl()
+    assert (fl.num_clients, fl.clients_per_round, fl.top_n) == (50, 20, 4)
+    assert fl.algo == "fedldf"
+    # 1 - n/K = 0.8 -> the 80 % headline
+    assert 1 - fl.top_n / fl.clients_per_round == pytest.approx(0.8)
+
+
+def test_llm_arch_fl_round_scan():
+    """FedLDF round on a reduced LLM arch (the large-model code path)."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("qwen3-1.7b").reduced(),
+                              param_dtype="float32",
+                              compute_dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    umap = UnitMap.build(params)
+    from repro.federated import build_round_scan
+    fl = FLConfig(algo="fedldf", clients_per_round=3, top_n=1, mode="scan",
+                  lr=0.01)
+    loss_fn = functools.partial(lambda c, p, b: tf.lm_loss(p, c, b), cfg)
+    round_fn = jax.jit(build_round_scan(loss_fn, umap, fl))
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(key, (3, 2, 16), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (3, 2, 16), 0, cfg.vocab_size)}
+    new_params, metrics = round_fn(params, batch, jnp.ones((3,)),
+                                   jax.random.PRNGKey(2))
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["comm"]["savings_frac"]) > 0.6
+
+
+def test_checkpoint_then_serve(tmp_path):
+    """Global model -> checkpoint -> reload -> decode: identical logits."""
+    import dataclasses, os
+    cfg = dataclasses.replace(get_config("qwen2-vl-2b").reduced(),
+                              param_dtype="float32",
+                              compute_dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    path = os.path.join(tmp_path, "global.npz")
+    save_pytree(path, params)
+    loaded = load_pytree(path)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab_size)
+    lg1, c1 = decode.prefill(params, cfg, toks, max_len=14)
+    lg2, c2 = decode.prefill(loaded, cfg, toks, max_len=14)
+    np.testing.assert_allclose(lg1, lg2, atol=1e-6)
+    s1, _ = decode.decode_step(params, cfg, toks[:, :1], c1)
+    s2, _ = decode.decode_step(loaded, cfg, toks[:, :1], c2)
+    np.testing.assert_allclose(s1, s2, atol=1e-6)
