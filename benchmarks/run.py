@@ -6,6 +6,8 @@ Sections:
   [kernel]    FedLDF hot-spot op microbenches (name,us_per_call,derived)
   [comm]      paper §III 80 %-reduction table (VGG-9, K=20, n=4)
   [bound]     Theorem 1 gap-bound verification
+  [engine]    host-loop driver vs device-resident scan engine (rounds/sec
+              + host-vs-scan fp32 equivalence; round_engine_bench.py)
   [fig3/4]    test-error-vs-communication curves, IID + Dirichlet(α=1)
   [roofline]  dry-run roofline table (if experiments/dryrun exists)
 """
@@ -36,6 +38,13 @@ def main(argv=None) -> None:
     bound.run()
 
     if not args.skip_fl:
+        print("# === [engine] host loop vs device-resident scan engine ===")
+        from benchmarks import round_engine_bench
+        round_engine_bench.run(rounds=150, reps=3)
+        if round_engine_bench.equivalence_check() >= \
+                round_engine_bench.EQUIV_TOL:
+            raise SystemExit("[engine] host-vs-scan equivalence FAILED")
+
         print("# === [fig3/fig4] error vs communication ===")
         from benchmarks import fl_comparison
         res = fl_comparison.run(paper_scale=args.paper_scale,

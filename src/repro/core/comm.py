@@ -54,6 +54,28 @@ def round_comm(selection: jnp.ndarray, umap: UnitMap, *,
     }
 
 
+# ----------------------------------------------------------------------
+# Device-side accumulator (scan engine): a dict of float32 scalars that
+# lives in the lax.scan carry, so no per-round device→host pull is needed.
+# ----------------------------------------------------------------------
+def comm_acc_init() -> dict:
+    """Zeroed jit-safe accumulator matching :class:`CommMeter`'s totals."""
+    z = jnp.float32(0.0)
+    return {"uplink_bytes": z, "downlink_bytes": z,
+            "fedavg_uplink_bytes": z, "rounds": z}
+
+
+def comm_acc_update(acc: dict, round_stats: dict) -> dict:
+    """Pure functional accumulate of one round's :func:`round_comm` stats."""
+    return {
+        "uplink_bytes": acc["uplink_bytes"] + round_stats["uplink_total"],
+        "downlink_bytes": acc["downlink_bytes"] + round_stats["downlink"],
+        "fedavg_uplink_bytes": (acc["fedavg_uplink_bytes"]
+                                + round_stats["fedavg_uplink"]),
+        "rounds": acc["rounds"] + 1.0,
+    }
+
+
 @dataclasses.dataclass
 class CommMeter:
     """Host-side cumulative communication meter."""
@@ -68,6 +90,14 @@ class CommMeter:
         self.downlink_bytes += float(round_stats["downlink"])
         self.fedavg_uplink_bytes += float(round_stats["fedavg_uplink"])
         self.rounds += 1
+
+    @classmethod
+    def from_accumulator(cls, acc: dict) -> "CommMeter":
+        """One device→host pull at the end of a scanned training run."""
+        return cls(uplink_bytes=float(acc["uplink_bytes"]),
+                   downlink_bytes=float(acc["downlink_bytes"]),
+                   fedavg_uplink_bytes=float(acc["fedavg_uplink_bytes"]),
+                   rounds=int(acc["rounds"]))
 
     @property
     def savings_frac(self) -> float:

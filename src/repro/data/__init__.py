@@ -1,8 +1,10 @@
-"""Data pipeline: synthetic datasets + federated partitioning + batching."""
+"""Data pipeline: synthetic datasets + federated partitioning + batching
+(host ``FederatedData`` and device-resident ``ClientShards``)."""
+from repro.data.device import ClientShards
 from repro.data.loader import FederatedData, lm_federated
 from repro.data.partition import dirichlet_partition, iid_partition, partition_sizes
 from repro.data.synthetic import ArrayDataset, make_image_dataset, make_lm_dataset
 
-__all__ = ["FederatedData", "lm_federated", "dirichlet_partition",
-           "iid_partition", "partition_sizes", "ArrayDataset",
-           "make_image_dataset", "make_lm_dataset"]
+__all__ = ["ClientShards", "FederatedData", "lm_federated",
+           "dirichlet_partition", "iid_partition", "partition_sizes",
+           "ArrayDataset", "make_image_dataset", "make_lm_dataset"]

@@ -1,0 +1,96 @@
+"""Device-resident client shards for the multi-round scan engine.
+
+The host driver re-gathers every round batch with numpy fancy indexing and
+re-uploads it to the device (one host→device transfer per round). For the
+``lax.scan``-over-rounds engine the whole dataset must live on device so a
+round batch is a pure gather:
+
+1. global arrays ``xs``/``ys`` are uploaded once;
+2. per-client index partitions are padded into a dense ``(N, S)`` int32
+   matrix (``S`` = largest client shard; padding repeats the client's own
+   indices cyclically, and sampling never reads past ``part_sizes[c]``);
+3. a round batch for participants ``clients`` is two device gathers:
+   a local index draw ``j ~ U[0, |D_c|)`` per (client, sample) followed by
+   ``xs[part_idx[clients, j]]``.
+
+``ClientShards`` is registered as a pytree so it can be passed through
+``jax.jit`` boundaries without baking the dataset into the jaxpr as a
+constant.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.loader import FederatedData
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientShards:
+    xs: jnp.ndarray          # (total, ...) features, device-resident
+    ys: jnp.ndarray          # (total, ...) labels, device-resident
+    part_idx: jnp.ndarray    # (N, S) padded global indices, int32
+    part_sizes: jnp.ndarray  # (N,) true shard sizes, int32
+    x_key: str = "images"
+    y_key: str = "labels"
+
+    @property
+    def num_clients(self) -> int:
+        return self.part_idx.shape[0]
+
+    def data_sizes(self) -> jnp.ndarray:
+        """|D_k| vector (float32) for the Eq. 5 weighting."""
+        return self.part_sizes.astype(jnp.float32)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def from_federated(fldata: FederatedData) -> "ClientShards":
+        smax = max(len(p) for p in fldata.parts)
+        n = len(fldata.parts)
+        idx = np.zeros((n, smax), dtype=np.int32)
+        for i, p in enumerate(fldata.parts):
+            idx[i, :len(p)] = p
+            if len(p) < smax:  # cyclic pad — every slot is a valid sample
+                idx[i, len(p):] = p[np.arange(smax - len(p)) % len(p)]
+        return ClientShards(
+            xs=jnp.asarray(fldata.xs), ys=jnp.asarray(fldata.ys),
+            part_idx=jnp.asarray(idx),
+            part_sizes=jnp.asarray([len(p) for p in fldata.parts],
+                                   dtype=jnp.int32),
+            x_key=fldata.x_key, y_key=fldata.y_key)
+
+    # ------------------------------------------------------------------
+    def gather(self, clients: jnp.ndarray, batch: int,
+               key: jax.Array) -> dict:
+        """Stacked (K, batch, ...) round batch, fully on device.
+
+        Samples uniformly **with replacement** over each client's shard
+        (a fixed-shape device draw; the numpy host path instead draws
+        without replacement whenever the shard is at least batch-sized, so
+        the two samplers differ in batch semantics, not just RNG stream).
+        Determinism comes from ``key`` alone, so the host driver with
+        ``sampler="jax"`` gathers bit-identical batches to the scan engine.
+        """
+        k = clients.shape[0]
+        sizes = self.part_sizes[clients]                        # (K,)
+        j = jax.random.randint(key, (k, batch), 0, sizes[:, None])
+        gidx = self.part_idx[clients[:, None], j]               # (K, batch)
+        return {self.x_key: jnp.take(self.xs, gidx, axis=0),
+                self.y_key: jnp.take(self.ys, gidx, axis=0)}
+
+
+def _shards_flatten(s: ClientShards):
+    return ((s.xs, s.ys, s.part_idx, s.part_sizes), (s.x_key, s.y_key))
+
+
+def _shards_unflatten(aux, children):
+    xs, ys, part_idx, part_sizes = children
+    return ClientShards(xs=xs, ys=ys, part_idx=part_idx,
+                        part_sizes=part_sizes, x_key=aux[0], y_key=aux[1])
+
+
+jax.tree_util.register_pytree_node(ClientShards, _shards_flatten,
+                                   _shards_unflatten)

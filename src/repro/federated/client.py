@@ -21,12 +21,18 @@ LossFn = Callable[[Pytree, dict], jnp.ndarray]
 
 
 def make_local_update(loss_fn: LossFn, opt: Optimizer,
-                      local_steps: int = 1):
+                      local_steps: int = 1, remat: bool = False):
     """Returns local_update(global_params, batch) -> (local_params, mean_loss).
 
     ``batch`` leaves are (b, ...) — the same batch is used for every local
     step (paper setting: local_steps=1 makes this exact; >1 approximates
     multi-epoch local training on the client's sampled data).
+
+    ``remat=True`` wraps each local step in ``jax.checkpoint`` so forward
+    activations are recomputed in the backward pass — useful when the whole
+    FL schedule is one ``lax.scan`` (run_training_scan) and K stacked
+    clients × local activations would otherwise set the peak-memory
+    high-water mark.
     """
 
     def local_update(global_params: Pytree, batch: dict):
@@ -38,6 +44,8 @@ def make_local_update(loss_fn: LossFn, opt: Optimizer,
             params, ostate = opt.update(grads, ostate, params)
             return (params, ostate), loss
 
+        if remat:
+            step = jax.checkpoint(step)
         (params, _), losses = jax.lax.scan(
             step, (global_params, ostate0), None, length=local_steps)
         return params, losses.mean()

@@ -1,11 +1,49 @@
-"""Participant sampling (Algorithm 1 line 5: C_t ← random(K, max(C·N, 1)))."""
+"""Participant sampling (Algorithm 1 line 5: C_t ← random(K, max(C·N, 1))).
+
+Two interchangeable samplers:
+
+- :func:`sample_clients` — host-side ``numpy`` sampling (the original
+  reference driver path; one host RNG draw per round).
+- :func:`sample_clients_jax` — pure-JAX sampling, jit/scan-safe, used by the
+  device-resident multi-round engine (``run_training_scan``) and by
+  ``run_training(sampler="jax")`` so the two drivers see *identical*
+  participant sets for a given seed.
+
+:func:`round_keys` defines the per-round key schedule shared by both JAX
+paths: one fold_in per round, split into (client, batch, algorithm) streams.
+"""
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
 def sample_clients(rng: np.random.Generator, num_clients: int,
                    k: int) -> np.ndarray:
-    """Uniformly sample K distinct participants for this round."""
+    """Uniformly sample K distinct participants for this round (host RNG)."""
     k = max(1, min(k, num_clients))
     return rng.choice(num_clients, size=k, replace=False)
+
+
+def sample_clients_jax(key: jax.Array, num_clients: int,
+                       k: int) -> jnp.ndarray:
+    """Uniformly sample K distinct participants on device (jit/scan-safe).
+
+    Deterministic in ``key``; shapes are static so this traces cleanly
+    inside ``lax.scan`` over rounds.
+    """
+    k = max(1, min(k, num_clients))
+    return jax.random.choice(key, num_clients, shape=(k,), replace=False)
+
+
+def round_keys(base_key: jax.Array, t) -> tuple[jax.Array, jax.Array,
+                                                jax.Array]:
+    """Per-round (client_key, batch_key, algo_key) streams.
+
+    ``t`` may be a Python int (host driver) or a traced scalar (scan engine);
+    both produce the same keys for the same round index.
+    """
+    k = jax.random.fold_in(base_key, t)
+    ck, bk, ak = jax.random.split(k, 3)
+    return ck, bk, ak

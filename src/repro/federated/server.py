@@ -1,6 +1,7 @@
-"""ServerExecute (paper Algorithm 1) — round function builders + driver.
+"""ServerExecute (paper Algorithm 1) — round function builders + drivers.
 
-Two execution modes produce identical aggregation semantics (tested):
+Two per-round execution modes produce identical aggregation semantics
+(tested):
 
 - ``vmap``: all K clients train in parallel (client axis shardable over the
   'data' mesh axis) and their models are materialised stacked — the paper's
@@ -11,13 +12,31 @@ Two execution modes produce identical aggregation semantics (tested):
   (phase 1: divergence only; phase 2: accumulate selected layers). This is
   protocol-level rematerialization — O(1)-client memory for LLM-scale FL.
 
+Two *multi-round* drivers share those round functions:
+
+- :func:`run_training` — the host-loop reference oracle: one Python
+  iteration per round (host RNG or JAX-RNG sampling, per-round
+  host↔device batch transfer, per-round ``CommMeter`` pulls).
+- :func:`run_training_scan` — the device-resident engine: the whole FL
+  schedule is one jitted ``jax.lax.scan`` over rounds. Client sampling is
+  ``jax.random.choice`` on device, round batches are gathered from
+  device-resident :class:`~repro.data.ClientShards`, communication totals
+  accumulate in the scan carry (one device→host pull per eval block), the
+  carry buffers (params, error-feedback residuals, comm accumulator) are
+  donated between blocks, and error-feedback residuals are threaded
+  through rounds via a per-client store — ``run_training(sampler="jax")``
+  and ``run_training_scan`` produce identical trajectories for the same
+  seed (tested to fp32 tolerance; see benchmarks/round_engine_bench.py for
+  the rounds/sec comparison).
+
 Algorithms: fedldf (paper), fedavg (Eq. 1), random (per-layer random-n),
 hdfl (client dropout [7]), fedadp (neuron pruning [6], vmap mode only).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-import time
+import functools
 from typing import Any, Callable, Optional
 
 import jax
@@ -29,8 +48,10 @@ from repro.core import comm as comm_mod
 from repro.core import fedadp as fedadp_mod
 from repro.core import selection as sel
 from repro.core.units import UnitMap
+from repro.data.device import ClientShards
 from repro.federated.client import make_local_update
-from repro.federated.sampling import sample_clients
+from repro.federated.sampling import (round_keys, sample_clients,
+                                      sample_clients_jax)
 from repro.optim import sgd
 from repro.optim.opt import Optimizer
 
@@ -50,6 +71,9 @@ class FLConfig:
     mode: str = "vmap"             # vmap | scan
     fedadp_keep: float = 0.2       # FedADP keep fraction (equal-comm setting)
     batch_per_client: int = 32
+    # remat local-training steps (jax.checkpoint): caps activation memory
+    # when K stacked clients run inside the scan engine
+    remat: bool = False
     # beyond-paper: quantized delta upload (0 = off) + error feedback
     quantize_bits: int = 0
     error_feedback: bool = False
@@ -60,6 +84,8 @@ class FLConfig:
         assert 1 <= self.top_n <= self.clients_per_round
         if self.error_feedback:
             assert self.quantize_bits > 0, "error feedback needs quantization"
+            assert self.algo != "fedadp", \
+                "fedadp aggregates pruned neurons, not quantized deltas"
 
 
 def _select(algo: str, divs: Optional[jnp.ndarray], key, k: int, u: int,
@@ -82,7 +108,8 @@ def build_round_vmap(loss_fn, umap: UnitMap, flcfg: FLConfig,
                      opt: Optimizer | None = None):
     """Round function with parallel (stacked) clients."""
     opt = opt or sgd(flcfg.lr)
-    local_update = make_local_update(loss_fn, opt, flcfg.local_steps)
+    local_update = make_local_update(loss_fn, opt, flcfg.local_steps,
+                                     remat=flcfg.remat)
     k = flcfg.clients_per_round
 
     def round_fn(params: Pytree, batch: dict, data_sizes: jnp.ndarray,
@@ -161,13 +188,17 @@ def build_round_scan(loss_fn, umap: UnitMap, flcfg: FLConfig,
     """
     if flcfg.algo == "fedadp":
         raise NotImplementedError("fedadp needs stacked clients (vmap mode)")
+    if flcfg.quantize_bits:
+        raise NotImplementedError(
+            "quantized uploads need stacked clients (vmap mode)")
     opt = opt or sgd(flcfg.lr)
-    local_update = make_local_update(loss_fn, opt, flcfg.local_steps)
+    local_update = make_local_update(loss_fn, opt, flcfg.local_steps,
+                                     remat=flcfg.remat)
     k = flcfg.clients_per_round
     needs_divergence = flcfg.algo == "fedldf"
 
     def round_fn(params: Pytree, batch: dict, data_sizes: jnp.ndarray,
-                 key: jax.Array):
+                 key: jax.Array, residuals: Pytree = None):
         # ---- phase 1: divergence feedback (only if the policy needs it)
         if needs_divergence:
             def phase1(carry, batch_k):
@@ -209,8 +240,43 @@ def build_round_fn(loss_fn, umap: UnitMap, flcfg: FLConfig,
     return build_round_scan(loss_fn, umap, flcfg, opt)
 
 
+# ----------------------------------------------------------------------
+# Compiled-callable cache. Both drivers build their jitted functions from
+# (loss_fn, umap, flcfg) alone; rebuilding a fresh ``jax.jit`` object per
+# driver call would force a full retrace + XLA recompile every time
+# ``run_training``/``run_training_scan`` is invoked (the jit cache is keyed
+# on function identity). The cache keeps one compiled callable per distinct
+# configuration, so repeated runs — benchmark repetitions, sweeps, tests —
+# pay compilation once.
+# ----------------------------------------------------------------------
+_JIT_CACHE: "collections.OrderedDict" = collections.OrderedDict()
+_JIT_CACHE_MAX = 64   # LRU bound: evicts one cold entry, never the hot set
+
+
+def _umap_cache_key(umap: UnitMap) -> tuple:
+    return (umap.names, tuple(sorted(umap.spans.items())), umap.unit_bytes)
+
+
+def _cached(kind: str, loss_fn, umap: UnitMap, flcfg: FLConfig, build):
+    """NOTE: keyed on ``loss_fn`` *identity* — pass a stable function (module
+    function, bound method, or a lambda created once) to hit the cache;
+    a lambda re-created per call misses every time."""
+    key = (kind, loss_fn, _umap_cache_key(umap), flcfg)
+    try:
+        fn = _JIT_CACHE.get(key)
+    except TypeError:       # unhashable loss_fn — skip caching
+        return build()
+    if fn is None:
+        while len(_JIT_CACHE) >= _JIT_CACHE_MAX:
+            _JIT_CACHE.popitem(last=False)
+        fn = _JIT_CACHE[key] = build()
+    else:
+        _JIT_CACHE.move_to_end(key)
+    return fn
+
+
 # ======================================================================
-# Host-side training driver
+# Multi-round drivers
 # ======================================================================
 @dataclasses.dataclass
 class TrainLog:
@@ -222,25 +288,82 @@ class TrainLog:
         default_factory=comm_mod.CommMeter)
 
 
+def init_residual_store(params: Pytree, num_clients: int) -> Pytree:
+    """Per-client error-feedback residual store: every leaf gets a leading
+    ``(N,)`` client axis (float32, zero-initialised). Rows for the round's
+    participants are gathered before the round and scattered back after —
+    residuals belong to *clients*, not to sampling slots."""
+    return jax.tree.map(
+        lambda l: jnp.zeros((num_clients,) + l.shape, jnp.float32), params)
+
+
+def _gather_rows(store: Pytree, clients: jnp.ndarray) -> Pytree:
+    return jax.tree.map(lambda l: l[clients], store)
+
+
+def _scatter_rows(store: Pytree, clients: jnp.ndarray,
+                  rows: Pytree) -> Pytree:
+    return jax.tree.map(lambda full, r: full.at[clients].set(r), store, rows)
+
+
 def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
                  rounds: int, eval_fn: Optional[Callable[[Pytree], float]] = None,
                  eval_every: int = 10, seed: int = 0,
-                 verbose: bool = False) -> tuple[Pytree, TrainLog]:
-    """Full FL training loop (paper Algorithm 1 ServerExecute)."""
+                 verbose: bool = False,
+                 sampler: str = "host") -> tuple[Pytree, TrainLog]:
+    """Full FL training loop (paper Algorithm 1 ServerExecute), host-driven.
+
+    One Python iteration per round — the reference oracle for
+    :func:`run_training_scan`. ``sampler`` picks the RNG stream:
+
+    - ``"host"`` (default): numpy client sampling + numpy batch gathering,
+      byte-compatible with the original seed driver;
+    - ``"jax"``: the engine's key schedule (:func:`round_keys` +
+      :func:`sample_clients_jax` + :meth:`ClientShards.gather`), so a fixed
+      seed yields the *same trajectory* as ``run_training_scan``.
+
+    Error-feedback residuals (``flcfg.error_feedback``) are threaded through
+    rounds via a per-client store (previously they were computed and
+    dropped, making EF a silent no-op).
+    """
+    assert sampler in ("host", "jax"), sampler
     umap = UnitMap.build(params)
-    round_fn = jax.jit(build_round_fn(loss_fn, umap, flcfg))
-    rng = np.random.default_rng(seed)
+    round_fn = _cached("round", loss_fn, umap, flcfg,
+                       lambda: jax.jit(build_round_fn(loss_fn, umap, flcfg)))
     log = TrainLog()
-    all_sizes = fldata.data_sizes()
+    residuals = (init_residual_store(params, flcfg.num_clients)
+                 if flcfg.error_feedback else None)
+    if sampler == "jax":
+        shards = (fldata if isinstance(fldata, ClientShards)
+                  else ClientShards.from_federated(fldata))
+        all_sizes_dev = shards.data_sizes()
+        base_key = jax.random.PRNGKey(seed)
+    else:
+        rng = np.random.default_rng(seed)
+        all_sizes = fldata.data_sizes()
 
     for t in range(rounds):
-        clients = sample_clients(rng, flcfg.num_clients,
-                                 flcfg.clients_per_round)
-        batch = fldata.round_batch(clients, flcfg.batch_per_client, rng)
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        sizes = jnp.asarray(all_sizes[clients])
-        key = jax.random.PRNGKey(seed * 100003 + t)
-        params, metrics = round_fn(params, batch, sizes, key)
+        if sampler == "jax":
+            ck, bk, key = round_keys(base_key, t)
+            clients = sample_clients_jax(ck, flcfg.num_clients,
+                                         flcfg.clients_per_round)
+            batch = shards.gather(clients, flcfg.batch_per_client, bk)
+            sizes = all_sizes_dev[clients]
+        else:
+            clients = sample_clients(rng, flcfg.num_clients,
+                                     flcfg.clients_per_round)
+            batch = fldata.round_batch(clients, flcfg.batch_per_client, rng)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            sizes = jnp.asarray(all_sizes[clients])
+            key = jax.random.PRNGKey(seed * 100003 + t)
+            clients = jnp.asarray(clients)
+        if residuals is not None:
+            res_rows = _gather_rows(residuals, clients)
+            params, metrics = round_fn(params, batch, sizes, key, res_rows)
+            residuals = _scatter_rows(residuals, clients,
+                                      metrics["residuals"])
+        else:
+            params, metrics = round_fn(params, batch, sizes, key)
         log.meter.update(metrics["comm"])
         log.rounds.append(t)
         log.losses.append(float(metrics["loss"]))
@@ -253,4 +376,120 @@ def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
                       f"test_err {err:.4f} uplink {log.meter.uplink_bytes/1e6:.1f}MB")
         elif verbose and t % 10 == 0:
             print(f"round {t:4d} loss {metrics['loss']:.4f}")
+    return params, log
+
+
+# ======================================================================
+# Device-resident multi-round engine
+# ======================================================================
+def _eval_cuts(rounds: int, eval_every: int, do_eval: bool) -> list[int]:
+    """Block boundaries: cut after round t iff the host driver would eval
+    there (t % eval_every == 0 or t == rounds-1); one block when not
+    evaluating."""
+    if not do_eval:
+        return [rounds]
+    return sorted({t + 1 for t in range(rounds)
+                   if t % eval_every == 0 or t == rounds - 1})
+
+
+def _build_block_fn(loss_fn, umap: UnitMap, flcfg: FLConfig):
+    """Compiled multi-round block: ``lax.scan`` of the round function.
+
+    ``run_block(carry, shards, all_sizes, base_key, t0, num)`` advances the
+    carry (params, residual store, comm accumulator) by ``num`` rounds
+    starting at round index ``t0``, entirely on device. ``t0`` is a traced
+    scalar so eval blocks of equal length share one executable.
+    """
+    round_fn = build_round_fn(loss_fn, umap, flcfg)
+    ef = flcfg.error_feedback
+
+    def one_round(carry, t, shards, all_sizes, base_key):
+        params, residuals, acc = carry
+        ck, bk, ak = round_keys(base_key, t)
+        clients = sample_clients_jax(ck, flcfg.num_clients,
+                                     flcfg.clients_per_round)
+        batch = shards.gather(clients, flcfg.batch_per_client, bk)
+        sizes = all_sizes[clients]
+        if ef:
+            res_rows = _gather_rows(residuals, clients)
+            params, metrics = round_fn(params, batch, sizes, ak, res_rows)
+            residuals = _scatter_rows(residuals, clients,
+                                      metrics.pop("residuals"))
+        else:
+            params, metrics = round_fn(params, batch, sizes, ak)
+        acc = comm_mod.comm_acc_update(acc, metrics["comm"])
+        per_round = {"loss": metrics["loss"],
+                     "uplink_bytes": acc["uplink_bytes"]}
+        return (params, residuals, acc), per_round
+
+    # carry buffers are donated so XLA reuses them across eval blocks; on
+    # CPU donation is a no-op warning, so only request it where it works.
+    donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+
+    @functools.partial(jax.jit, static_argnames=("num",),
+                       donate_argnums=donate)
+    def run_block(carry, shards, all_sizes, base_key, t0, num):
+        body = functools.partial(one_round, shards=shards,
+                                 all_sizes=all_sizes, base_key=base_key)
+        return jax.lax.scan(body, carry, t0 + jnp.arange(num))
+
+    return run_block
+
+
+def run_training_scan(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
+                      rounds: int,
+                      eval_fn: Optional[Callable[[Pytree], float]] = None,
+                      eval_every: int = 10, seed: int = 0,
+                      verbose: bool = False) -> tuple[Pytree, TrainLog]:
+    """Device-resident FL training: ``jax.lax.scan`` over rounds.
+
+    The whole schedule — client sampling (``jax.random.choice``), round-batch
+    gathering from device-resident shards, local training, selection,
+    aggregation, communication accounting, and error-feedback residual
+    updates — runs inside one jitted scan per eval block, with the carry
+    (params, residual store, comm accumulator) donated between blocks.
+    Host↔device traffic is one stacked (losses, uplink) pull per block
+    instead of several scalar syncs per round.
+
+    ``fldata`` may be a :class:`~repro.data.FederatedData` (uploaded once)
+    or a prebuilt :class:`~repro.data.ClientShards`. Same seed ⇒ same
+    trajectory as ``run_training(sampler="jax")`` (fp32 tolerance).
+    """
+    umap = UnitMap.build(params)
+    shards = (fldata if isinstance(fldata, ClientShards)
+              else ClientShards.from_federated(fldata))
+    ef = flcfg.error_feedback
+    run_block = _cached("block", loss_fn, umap, flcfg,
+                        lambda: _build_block_fn(loss_fn, umap, flcfg))
+    if jax.default_backend() in ("tpu", "gpu"):
+        # run_block donates its carry; copy once so the caller's param
+        # buffers survive the first block (residuals/acc are fresh).
+        params = jax.tree.map(jnp.copy, params)
+    residuals0 = (init_residual_store(params, flcfg.num_clients)
+                  if ef else None)
+    carry = (params, residuals0, comm_mod.comm_acc_init())
+    all_sizes = shards.data_sizes()
+    base_key = jax.random.PRNGKey(seed)
+    log = TrainLog()
+    t0 = 0
+    for cut in _eval_cuts(rounds, eval_every, eval_fn is not None):
+        num = cut - t0
+        carry, per_round = run_block(carry, shards, all_sizes, base_key,
+                                     jnp.int32(t0), num)
+        losses = np.asarray(per_round["loss"])
+        uplink = np.asarray(per_round["uplink_bytes"])
+        log.rounds.extend(range(t0, cut))
+        log.losses.extend(float(l) for l in losses)
+        log.uplink_mb.extend(float(u) / 1e6 for u in uplink)
+        if eval_fn is not None:
+            err = float(eval_fn(carry[0]))
+            log.test_errors.append((cut - 1, err, float(uplink[-1])))
+            if verbose:
+                print(f"round {cut-1:4d} loss {losses[-1]:.4f} "
+                      f"test_err {err:.4f} uplink {uplink[-1]/1e6:.1f}MB")
+        elif verbose:
+            print(f"round {cut-1:4d} loss {losses[-1]:.4f}")
+        t0 = cut
+    params, _, acc = carry
+    log.meter = comm_mod.CommMeter.from_accumulator(acc)
     return params, log

@@ -33,8 +33,15 @@ def _macc_kernel(acc_ref, x_ref, w_ref, out_ref):
 def masked_accumulate(acc: jnp.ndarray, x: jnp.ndarray, w: jnp.ndarray, *,
                       block_r: int = DEFAULT_BLOCK_R,
                       block_c: int = DEFAULT_BLOCK_C,
-                      interpret: bool = True) -> jnp.ndarray:
-    """acc + w[:, None] * x via Pallas. acc, x: (R, C); w: (R,) → (R, C) f32."""
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """acc + w[:, None] * x via Pallas. acc, x: (R, C); w: (R,) → (R, C) f32.
+
+    ``interpret=None`` resolves via the backend check (compiled on TPU,
+    interpret elsewhere).
+    """
+    if interpret is None:
+        from repro.kernels import ops
+        interpret = ops._interpret()
     assert acc.shape == x.shape and acc.ndim == 2
     assert w.shape == (acc.shape[0],)
     r, c = acc.shape

@@ -41,12 +41,16 @@ def _sqdiff_kernel(a_ref, b_ref, out_ref):
 def sqdiff_rowsum(a: jnp.ndarray, b: jnp.ndarray, *,
                   block_r: int = DEFAULT_BLOCK_R,
                   block_c: int = DEFAULT_BLOCK_C,
-                  interpret: bool = True) -> jnp.ndarray:
+                  interpret: bool | None = None) -> jnp.ndarray:
     """Per-row Σ(a−b)² via Pallas. a, b: (R, C) → (R,) float32.
 
-    Inputs are zero-padded up to block multiples (pad contributes (0−0)²=0,
-    so the result is exact).
+    ``interpret=None`` resolves via the backend check (compiled on TPU,
+    interpret elsewhere). Inputs are zero-padded up to block multiples
+    (pad contributes (0−0)²=0, so the result is exact).
     """
+    if interpret is None:
+        from repro.kernels import ops
+        interpret = ops._interpret()
     assert a.shape == b.shape and a.ndim == 2
     r, c = a.shape
     block_r = min(block_r, max(8, r))

@@ -91,12 +91,16 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, window: int = 0,
                     tq: int = DEFAULT_TQ, tk: int = DEFAULT_TK,
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: bool | None = None) -> jnp.ndarray:
     """q: (BH, Sq, hd); k, v: (BKV, Skv, hd), BH = BKV·group.
 
     Returns (BH, Sq, hd) in q.dtype. Sq/Skv are zero-padded to tile
-    multiples internally (padded KV masked via kv_len).
+    multiples internally (padded KV masked via kv_len). ``interpret=None``
+    resolves via the backend check (compiled on TPU, interpret elsewhere).
     """
+    if interpret is None:
+        from repro.kernels import ops
+        interpret = ops._interpret()
     bh, sq, hd = q.shape
     bkv, skv, _ = k.shape
     assert bh % bkv == 0, (bh, bkv)

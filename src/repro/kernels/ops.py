@@ -4,6 +4,11 @@ On TPU the Pallas kernels run compiled; on CPU (this container) the pure-jnp
 reference is both the oracle and the fast path (interpret-mode Pallas
 executes the kernel body in Python and is only used for validation).
 
+The kernel entry points (``sqdiff_rowsum``, ``masked_accumulate``,
+``flash_attention``) default to ``interpret=None``, which resolves through
+:func:`_interpret` here — so TPU callers get compiled Pallas without opting
+in, and CPU callers get interpret mode.
+
 Set ``REPRO_FORCE_PALLAS=1`` to route through the Pallas kernels in
 interpret mode everywhere (used by tests/CI to exercise the kernel path).
 """

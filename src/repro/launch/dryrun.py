@@ -88,9 +88,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         t2 = time.time()
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
-    if isinstance(cost, (list, tuple)):
-        cost = cost[0]
+    cost = hloparse.cost_analysis_dict(compiled.cost_analysis())
     hlo = compiled.as_text()
     # Loop-aware totals (while bodies × trip counts) — primary numbers;
     # cost_analysis() counts each while body once (verified) and is kept

@@ -36,6 +36,18 @@ _DTYPE_BYTES = {
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
+def cost_analysis_dict(cost) -> dict:
+    """Normalise ``compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns one dict per device (a list); current JAX returns the
+    dict directly (or ``None`` on backends without cost analysis). Always
+    returns a plain dict so callers can ``.get("flops", 0.0)``.
+    """
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    return dict(cost) if cost else {}
+
+
 # one shape token: f32[1,2,3] (layout braces optional)
 _SHAPE_TOK = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")

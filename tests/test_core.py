@@ -4,7 +4,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional [test] extra — deterministic fallbacks below
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (BoundParams, UnitMap, aggregate_stacked,
                         asymptotic_gap, contraction_A, fedavg_stacked,
@@ -83,10 +88,8 @@ class TestSelection:
         s = sel.topn_divergence(divs, 2)
         np.testing.assert_array_equal(s, [[1, 0], [0, 1], [1, 1]])
 
-    @settings(max_examples=30, deadline=None)
-    @given(k=st.integers(2, 12), u=st.integers(1, 9),
-           n=st.integers(1, 12), seed=st.integers(0, 10**6))
-    def test_topn_properties(self, k, u, n, seed):
+    @staticmethod
+    def _check_topn_properties(k, u, n, seed):
         n = min(n, k)
         divs = jax.random.uniform(jax.random.PRNGKey(seed), (k, u))
         s = np.asarray(sel.topn_divergence(divs, n))
@@ -98,6 +101,21 @@ class TestSelection:
             rest = np.asarray(divs)[:, col][s[:, col] == 0]
             if len(rest):
                 assert chosen.min() >= rest.max() - 1e-6
+
+    # deterministic fallback grid — covers the invariant without hypothesis
+    @pytest.mark.parametrize("k,u,n,seed", [
+        (2, 1, 1, 0), (3, 4, 2, 1), (12, 9, 12, 7), (5, 3, 5, 42),
+        (7, 6, 3, 123), (9, 1, 4, 999983), (4, 2, 1, 31337),
+    ])
+    def test_topn_properties_cases(self, k, u, n, seed):
+        self._check_topn_properties(k, u, n, seed)
+
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=30, deadline=None)
+        @given(k=st.integers(2, 12), u=st.integers(1, 9),
+               n=st.integers(1, 12), seed=st.integers(0, 10**6))
+        def test_topn_properties(self, k, u, n, seed):
+            self._check_topn_properties(k, u, n, seed)
 
     def test_random_per_layer_counts(self):
         s = np.asarray(sel.random_per_layer(jax.random.PRNGKey(0), 10, 7, 3))

@@ -3,7 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional [test] extra — deterministic fallbacks below
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels.flash_attention import flash_attention, ref_attention
 
@@ -69,10 +74,7 @@ def test_matches_model_attend_path():
     np.testing.assert_allclose(kern, model_out, rtol=2e-4, atol=2e-5)
 
 
-@settings(max_examples=10, deadline=None)
-@given(sq=st.integers(2, 40), skv=st.integers(2, 60),
-       seed=st.integers(0, 10**6))
-def test_flash_property_random_shapes(sq, skv, seed):
+def _check_flash_random_shapes(sq, skv, seed):
     key = jax.random.PRNGKey(seed)
     q = jax.random.normal(key, (2, sq, 16))
     k = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, skv, 16))
@@ -81,3 +83,19 @@ def test_flash_property_random_shapes(sq, skv, seed):
                           interpret=True)
     exp = ref_attention(q, k, v, causal=False)
     np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-5)
+
+
+# deterministic fallback grid — covers the invariant without hypothesis
+@pytest.mark.parametrize("sq,skv,seed", [
+    (2, 2, 0), (40, 60, 1), (17, 33, 2), (16, 16, 3), (3, 47, 424242),
+])
+def test_flash_random_shapes_cases(sq, skv, seed):
+    _check_flash_random_shapes(sq, skv, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(sq=st.integers(2, 40), skv=st.integers(2, 60),
+           seed=st.integers(0, 10**6))
+    def test_flash_property_random_shapes(sq, skv, seed):
+        _check_flash_random_shapes(sq, skv, seed)

@@ -56,7 +56,8 @@ def test_cost_analysis_undercounts_while_bodies():
     def f(x, w):
         return jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=10)[0]
     compiled = jax.jit(f).lower(X, W).compile()
-    xla_flops = compiled.cost_analysis().get("flops", 0.0)
+    xla_flops = hloparse.cost_analysis_dict(
+        compiled.cost_analysis()).get("flops", 0.0)
     parsed = hloparse.analyze(compiled.as_text()).flops
     assert parsed == pytest.approx(10 * MM_FLOPS, rel=0.01)
     assert xla_flops <= parsed / 5  # XLA counts the body once

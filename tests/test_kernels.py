@@ -4,7 +4,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional [test] extra — deterministic fallbacks below
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels import aggregate as ka
 from repro.kernels import divergence as kd
@@ -51,10 +56,7 @@ def test_sqdiff_block_shape_invariance(block_r, block_c):
     np.testing.assert_allclose(out, ref.sqdiff_rowsum(a, b), rtol=1e-5)
 
 
-@settings(max_examples=25, deadline=None)
-@given(r=st.integers(1, 17), c=st.integers(1, 300),
-       seed=st.integers(0, 2**31 - 1))
-def test_sqdiff_rowsum_property(r, c, seed):
+def _check_sqdiff_rowsum_property(r, c, seed):
     """∀ shapes: kernel == Σ(a−b)² per row; zero diff → zero."""
     k = jax.random.PRNGKey(seed)
     a = jax.random.normal(k, (r, c))
@@ -65,10 +67,15 @@ def test_sqdiff_rowsum_property(r, c, seed):
     np.testing.assert_allclose(out2, np.full(r, float(c)), rtol=1e-4)
 
 
-@settings(max_examples=20, deadline=None)
-@given(r=st.integers(1, 9), c=st.integers(1, 200),
-       w0=st.floats(-2, 2), seed=st.integers(0, 2**31 - 1))
-def test_masked_accumulate_property(r, c, w0, seed):
+# deterministic fallback grid — covers the invariant without hypothesis
+@pytest.mark.parametrize("r,c,seed", [
+    (1, 1, 0), (1, 300, 1), (17, 1, 2), (5, 129, 3), (8, 257, 12345),
+])
+def test_sqdiff_rowsum_property_cases(r, c, seed):
+    _check_sqdiff_rowsum_property(r, c, seed)
+
+
+def _check_masked_accumulate_property(r, c, w0, seed):
     """w = 0 rows leave acc unchanged; w scales linearly."""
     k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
     acc = jax.random.normal(k1, (r, c))
@@ -79,6 +86,28 @@ def test_masked_accumulate_property(r, c, w0, seed):
                                rtol=1e-4, atol=1e-5)
     zero = ka.masked_accumulate(acc, x, jnp.zeros((r,)), interpret=True)
     np.testing.assert_allclose(zero, acc, atol=1e-6)
+
+
+@pytest.mark.parametrize("r,c,w0,seed", [
+    (1, 1, -2.0, 0), (1, 200, 0.5, 1), (9, 1, 2.0, 2), (4, 100, -0.75, 77),
+    (7, 63, 1.0, 31337),
+])
+def test_masked_accumulate_property_cases(r, c, w0, seed):
+    _check_masked_accumulate_property(r, c, w0, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(r=st.integers(1, 17), c=st.integers(1, 300),
+           seed=st.integers(0, 2**31 - 1))
+    def test_sqdiff_rowsum_property(r, c, seed):
+        _check_sqdiff_rowsum_property(r, c, seed)
+
+    @settings(max_examples=20, deadline=None)
+    @given(r=st.integers(1, 9), c=st.integers(1, 200),
+           w0=st.floats(-2, 2), seed=st.integers(0, 2**31 - 1))
+    def test_masked_accumulate_property(r, c, w0, seed):
+        _check_masked_accumulate_property(r, c, w0, seed)
 
 
 def test_ops_dispatch_forced_pallas(monkeypatch):

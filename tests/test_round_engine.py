@@ -1,0 +1,156 @@
+"""Device-resident multi-round engine: host-oracle equivalence, device
+sampling/gathering, and the error-feedback residual-threading regression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import (ClientShards, FederatedData, iid_partition,
+                        make_image_dataset)
+from repro.federated import (FLConfig, run_training, run_training_scan,
+                             sample_clients_jax)
+
+N_CLIENTS, K = 8, 4
+
+
+def _mlp_params(key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 3)
+    return {
+        "l1": {"w": jax.random.normal(ks[0], (3072, 16)) * 0.02,
+               "b": jnp.zeros((16,))},
+        "head": {"w": jax.random.normal(ks[1], (16, 10)) * 0.1,
+                 "b": jnp.zeros((10,))},
+    }
+
+
+def _loss(params, batch):
+    x = batch["images"].reshape(batch["images"].shape[0], -1)
+    h = jax.nn.relu(x @ params["l1"]["w"] + params["l1"]["b"])
+    logits = h @ params["head"]["w"] + params["head"]["b"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, batch["labels"][:, None],
+                                axis=-1).mean()
+
+
+@pytest.fixture(scope="module")
+def task():
+    train, _ = make_image_dataset(num_train=320, num_test=16, seed=1)
+    parts = iid_partition(train.ys, N_CLIENTS, seed=0)
+    data = FederatedData(train.xs, train.ys, parts)
+    return _mlp_params(), data
+
+
+def _assert_trees_close(a, b, atol=2e-5):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol)
+
+
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("algo", ["fedldf", "fedavg"])
+@pytest.mark.parametrize("mode", ["vmap", "scan"])
+def test_scan_engine_matches_host_driver(task, algo, mode):
+    """Same seed ⇒ same trajectory: host loop (JAX sampler) vs scan engine,
+    across aggregation algorithms and client-execution modes."""
+    params, data = task
+    fl = FLConfig(algo=algo, num_clients=N_CLIENTS, clients_per_round=K,
+                  top_n=2, mode=mode, batch_per_client=8)
+    ph, lh = run_training(params, _loss, data, fl, rounds=4, seed=3,
+                          sampler="jax")
+    ps, ls = run_training_scan(params, _loss, data, fl, rounds=4, seed=3)
+    _assert_trees_close(ph, ps)
+    np.testing.assert_allclose(lh.losses, ls.losses, atol=1e-5)
+    assert lh.meter.uplink_bytes == pytest.approx(ls.meter.uplink_bytes)
+    assert lh.meter.rounds == ls.meter.rounds == 4
+
+
+def test_scan_engine_eval_blocks_match_host(task):
+    """Eval chunking must not perturb the trajectory, and eval points must
+    mirror the host driver's (t % eval_every == 0 or last)."""
+    params, data = task
+    fl = FLConfig(algo="fedldf", num_clients=N_CLIENTS, clients_per_round=K,
+                  top_n=2, mode="vmap", batch_per_client=8)
+    eval_fn = jax.jit(lambda p: jnp.float32(0.5))
+    ph, lh = run_training(params, _loss, data, fl, rounds=5, seed=0,
+                          sampler="jax", eval_fn=eval_fn, eval_every=2)
+    ps, ls = run_training_scan(params, _loss, data, fl, rounds=5, seed=0,
+                               eval_fn=eval_fn, eval_every=2)
+    _assert_trees_close(ph, ps)
+    assert [t for t, _, _ in lh.test_errors] == \
+        [t for t, _, _ in ls.test_errors]
+
+
+# ----------------------------------------------------------------------
+class TestDeviceSampling:
+    def test_sample_clients_jax_distinct_in_range(self):
+        for s in range(5):
+            c = np.asarray(sample_clients_jax(jax.random.PRNGKey(s), 10, 6))
+            assert len(np.unique(c)) == 6
+            assert c.min() >= 0 and c.max() < 10
+
+    def test_gather_deterministic_and_within_partition(self, task):
+        _, data = task
+        shards = ClientShards.from_federated(data)
+        clients = jnp.array([1, 3, 5])
+        key = jax.random.PRNGKey(7)
+        b1 = shards.gather(clients, 4, key)
+        b2 = shards.gather(clients, 4, key)
+        np.testing.assert_array_equal(np.asarray(b1["images"]),
+                                      np.asarray(b2["images"]))
+        # every gathered sample must come from the owning client's shard
+        sizes = shards.part_sizes
+        j = jax.random.randint(key, (3, 4), 0, sizes[clients][:, None])
+        gidx = np.asarray(shards.part_idx[clients[:, None], j])
+        for row, c in enumerate([1, 3, 5]):
+            assert set(gidx[row]) <= set(np.asarray(data.parts[c]))
+
+    def test_shards_pad_unequal_partitions(self):
+        xs = np.arange(40, dtype=np.float32).reshape(10, 2, 2)
+        ys = np.arange(10)
+        parts = [np.array([0, 1, 2, 3, 4, 5]), np.array([6, 7]),
+                 np.array([8, 9])]
+        shards = ClientShards.from_federated(FederatedData(xs, ys, parts))
+        assert shards.part_idx.shape == (3, 6)
+        np.testing.assert_array_equal(np.asarray(shards.part_sizes),
+                                      [6, 2, 2])
+        # cyclic padding keeps every slot a valid member of the shard
+        for i, p in enumerate(parts):
+            assert set(np.asarray(shards.part_idx[i])) == set(p)
+
+
+# ----------------------------------------------------------------------
+class TestErrorFeedback:
+    """Regression for the silent no-op: residuals must be threaded through
+    rounds, so EF changes the uploaded payloads from round 2 onward."""
+
+    def _cfg(self, ef):
+        return FLConfig(algo="fedldf", num_clients=N_CLIENTS,
+                        clients_per_round=K, top_n=2, mode="vmap",
+                        batch_per_client=8, quantize_bits=4,
+                        error_feedback=ef)
+
+    def test_round_one_identical_then_diverges(self, task):
+        params, data = task
+        # residuals are zero in round 1 ⇒ EF cannot change the payload yet
+        p_off1, _ = run_training_scan(params, _loss, data, self._cfg(False),
+                                      rounds=1, seed=0)
+        p_on1, _ = run_training_scan(params, _loss, data, self._cfg(True),
+                                     rounds=1, seed=0)
+        _assert_trees_close(p_off1, p_on1, atol=0.0)
+        # from round 2 the carried residual alters Q(Δ+e) — uploads differ
+        p_off, _ = run_training_scan(params, _loss, data, self._cfg(False),
+                                     rounds=3, seed=0)
+        p_on, _ = run_training_scan(params, _loss, data, self._cfg(True),
+                                    rounds=3, seed=0)
+        diff = max(float(jnp.abs(a - b).max()) for a, b in
+                   zip(jax.tree.leaves(p_off), jax.tree.leaves(p_on)))
+        assert diff > 1e-6, "error feedback had no effect across rounds"
+
+    def test_host_driver_threads_residuals_too(self, task):
+        """The host driver fix: run_training must agree with the engine
+        when error feedback is on (it used to drop the residuals)."""
+        params, data = task
+        ph, _ = run_training(params, _loss, data, self._cfg(True),
+                             rounds=3, seed=0, sampler="jax")
+        ps, _ = run_training_scan(params, _loss, data, self._cfg(True),
+                                  rounds=3, seed=0)
+        _assert_trees_close(ph, ps)
