@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import sys
 
-import numpy as np
 
 from repro.core.convergence import (BoundParams, asymptotic_gap,
                                     contraction_A, gap_bound, gap_curve,

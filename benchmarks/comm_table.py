@@ -11,7 +11,6 @@ from __future__ import annotations
 import sys
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import UnitMap, round_comm, selection as sel
 from repro.core.fedadp import comm_bytes as fedadp_bytes

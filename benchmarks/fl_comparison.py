@@ -17,7 +17,6 @@ import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.data import (FederatedData, dirichlet_partition, iid_partition,
                         make_image_dataset)

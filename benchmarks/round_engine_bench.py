@@ -41,7 +41,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.data import (ClientShards, FederatedData, iid_partition,
                         make_image_dataset)

@@ -1,6 +1,7 @@
 """Benchmark harness — one section per paper table/figure + system benches.
 
     PYTHONPATH=src python -m benchmarks.run [--fl-rounds N] [--skip-fl]
+        [--ci] [--json PATH]
 
 Sections:
   [kernel]    FedLDF hot-spot op microbenches (name,us_per_call,derived)
@@ -8,12 +9,20 @@ Sections:
   [bound]     Theorem 1 gap-bound verification
   [engine]    host-loop driver vs device-resident scan engine (rounds/sec
               + host-vs-scan fp32 equivalence; round_engine_bench.py)
+  [shard]     client-axis sharding over a forced-8-device CPU mesh
+              (rounds/sec vs mesh size; shard_engine_bench.py)
   [fig3/4]    test-error-vs-communication curves, IID + Dirichlet(α=1)
   [roofline]  dry-run roofline table (if experiments/dryrun exists)
+
+``--ci`` shrinks every section to smoke shapes (tiny round counts, one rep)
+so the whole harness fits in a CI job; ``--json`` dumps the per-section
+results (the BENCH_ci.json artifact CI uploads on every push, so the repo's
+perf trajectory is recorded rather than anecdotal).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 
@@ -22,44 +31,67 @@ def main(argv=None) -> None:
     ap.add_argument("--fl-rounds", type=int, default=30)
     ap.add_argument("--skip-fl", action="store_true")
     ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--ci", action="store_true",
+                    help="smoke shapes: tiny rounds/reps, skip fig3/4 sweep")
+    ap.add_argument("--json", default=None,
+                    help="write per-section results as JSON")
     args = ap.parse_args(argv)
 
+    results: dict = {"ci": args.ci}
     t0 = time.time()
     print("# === [kernel] hot-spot microbenchmarks ===")
     from benchmarks import kernel_bench
-    kernel_bench.run()
+    results["kernel"] = kernel_bench.run()
 
     print("# === [comm] paper comm-overhead table (VGG-9, K=20, n=4) ===")
     from benchmarks import comm_table
-    comm_table.run()
+    results["comm"] = comm_table.run()
 
     print("# === [bound] Theorem 1 verification ===")
     from benchmarks import bound
-    bound.run()
+    results["bound"] = bound.run()
 
     if not args.skip_fl:
         print("# === [engine] host loop vs device-resident scan engine ===")
         from benchmarks import round_engine_bench
-        round_engine_bench.run(rounds=150, reps=3)
+        results["engine"] = round_engine_bench.run(
+            rounds=20 if args.ci else 150, reps=1 if args.ci else 3)
         if round_engine_bench.equivalence_check() >= \
                 round_engine_bench.EQUIV_TOL:
             raise SystemExit("[engine] host-vs-scan equivalence FAILED")
 
-        print("# === [fig3/fig4] error vs communication ===")
-        from benchmarks import fl_comparison
-        res = fl_comparison.run(paper_scale=args.paper_scale,
-                                rounds=args.fl_rounds)
-        fl_comparison.summarize(res)
+        print("# === [shard] client-axis sharding vs mesh size ===")
+        from benchmarks import shard_engine_bench
+        # keep the client-heavy shape even in CI (smaller N is overhead-
+        # bound and the speedup number stops meaning anything); trim
+        # rounds/reps instead
+        results["shard"] = shard_engine_bench.run(
+            rounds=10 if args.ci else 30, reps=1 if args.ci else 5)
+        if not results["shard"].get("equiv_ok"):
+            raise SystemExit("[shard] sharded-vs-unsharded equivalence "
+                             "FAILED")
 
-        print("# === [n-sweep] Theorem-1 n/K trade-off ablation ===")
-        from benchmarks import n_sweep
-        n_sweep.run(rounds=max(20, args.fl_rounds // 2))
+        if not args.ci:
+            print("# === [fig3/fig4] error vs communication ===")
+            from benchmarks import fl_comparison
+            res = fl_comparison.run(paper_scale=args.paper_scale,
+                                    rounds=args.fl_rounds)
+            fl_comparison.summarize(res)
+
+            print("# === [n-sweep] Theorem-1 n/K trade-off ablation ===")
+            from benchmarks import n_sweep
+            n_sweep.run(rounds=max(20, args.fl_rounds // 2))
 
     print("# === [roofline] dry-run table ===")
     from benchmarks import roofline_table
     roofline_table.run()
 
-    print(f"# total benchmark wall time: {time.time()-t0:.1f}s")
+    results["wall_time_s"] = time.time() - t0
+    print(f"# total benchmark wall time: {results['wall_time_s']:.1f}s")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, default=float)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,247 @@
+"""Client-axis sharding benchmark: rounds/sec vs device-mesh size.
+
+    PYTHONPATH=src python -m benchmarks.shard_engine_bench
+        [--devices 8] [--rounds N] [--reps R] [--clients N] [--json PATH]
+
+Measures :func:`repro.federated.run_training_scan` on a client-heavy FedLDF
+workload (N=K=64 clients by default) with the stacked client axis sharded
+over a 'clients' mesh of 1, 2, 4, ... devices, against the unsharded
+``mesh=None`` single-device engine. On CPU the devices are forced virtual
+ones (``XLA_FLAGS=--xla_force_host_platform_device_count=8``) — the same
+flag CI uses — so the scaling path is measurable in any container; each
+virtual device executes on its own thread, so the ceiling is the physical
+core count, not 8.
+
+The workload uses ``local_steps=2``: after the first local step every
+client's weights have diverged, so the remaining local-training matmuls are
+per-client batched ops that XLA cannot collapse into one device-wide GEMM —
+exactly the regime where the client axis is the scaling dimension (and the
+regime of real FL, where clients run many local steps). With
+``local_steps=1`` a single device can fuse the whole cohort's forward pass
+into one multithreaded GEMM and sharding has nothing left to win on CPU.
+
+When the current process lacks the requested device count (e.g. invoked
+from benchmarks/run.py after JAX already initialised the single real CPU
+device), the benchmark re-executes itself in a subprocess with XLA_FLAGS
+set, streams its output, and returns the parsed results.
+
+Also re-checks sharded-vs-unsharded trajectory equivalence on a fixed seed
+(fp32 tolerance — reduction order differs across mesh sizes).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from benchmarks.round_engine_bench import EQUIV_TOL  # single source
+
+# paper-motivated, client-heavy: full participation of a 64-client cohort
+D_IN, HIDDEN, N_CLASSES = 3072, 64, 10
+LOCAL_STEPS = 2
+
+
+def _mlp_params(key):
+    import jax
+    import jax.numpy as jnp
+    ks = jax.random.split(key, 2)
+    return {"l1": {"w": jax.random.normal(ks[0], (D_IN, HIDDEN)) * 0.02,
+                   "b": jnp.zeros((HIDDEN,))},
+            "head": {"w": jax.random.normal(ks[1], (HIDDEN, N_CLASSES)) * 0.1,
+                     "b": jnp.zeros((N_CLASSES,))}}
+
+
+def _mlp_loss(params, batch):
+    import jax
+    import jax.numpy as jnp
+    x = batch["images"].reshape(batch["images"].shape[0], -1)
+    h = jax.nn.relu(x @ params["l1"]["w"] + params["l1"]["b"])
+    logits = h @ params["head"]["w"] + params["head"]["b"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, batch["labels"][:, None],
+                                axis=-1).mean()
+
+
+def _make_task(num_clients: int, batch: int, seed: int = 0):
+    import jax
+    from repro.data import (ClientShards, FederatedData, iid_partition,
+                            make_image_dataset)
+    from repro.federated import FLConfig
+    train, _ = make_image_dataset(num_train=num_clients * 50, num_test=16,
+                                  seed=1)
+    parts = iid_partition(train.ys, num_clients, seed=seed)
+    shards = ClientShards.from_federated(
+        FederatedData(train.xs, train.ys, parts))
+    params = _mlp_params(jax.random.PRNGKey(seed))
+
+    def flcfg(mesh):
+        return FLConfig(algo="fedldf", num_clients=num_clients,
+                        clients_per_round=num_clients, top_n=4,
+                        local_steps=LOCAL_STEPS, batch_per_client=batch,
+                        mesh=mesh)
+
+    return params, _mlp_loss, shards, flcfg
+
+
+def _best_rates(fns: list, rounds: int, reps: int) -> list[float]:
+    """Best-of-``reps`` rounds/sec for every candidate, measured
+    *interleaved* (one rep of each per sweep) so ambient-load drift on a
+    shared box biases all candidates equally instead of whichever ran
+    last; first call per candidate warms the jit cache outside timing."""
+    for fn in fns:
+        fn()
+    best = [float("inf")] * len(fns)
+    for _ in range(reps):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            fn()
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return [rounds / b for b in best]
+
+
+def _mesh_sizes(limit: int) -> list[int]:
+    sizes, d = [], 1
+    while d <= limit:
+        sizes.append(d)
+        d *= 2
+    return sizes
+
+
+def run_local(devices: int = 8, rounds: int = 30, reps: int = 5,
+              clients: int = 64, batch: int = 16, out=sys.stdout) -> dict:
+    """Run in-process (requires >= ``devices`` JAX devices)."""
+    import jax
+    from repro.federated import run_training_scan
+    from repro.launch.mesh import make_client_mesh
+
+    params, loss, shards, flcfg = _make_task(clients, batch)
+    print(f"clients={clients} (full participation) B={batch} "
+          f"local_steps={LOCAL_STEPS} rounds={rounds} "
+          f"devices={len(jax.devices())} backend={jax.default_backend()}",
+          file=out)
+
+    results = {"clients": clients, "batch": batch, "rounds": rounds,
+               "devices": len(jax.devices()), "mesh": {}}
+    sizes = _mesh_sizes(min(devices, len(jax.devices())))
+
+    def runner(mesh):
+        return lambda: run_training_scan(params, loss, shards, flcfg(mesh),
+                                         rounds=rounds, seed=0)
+
+    rates = _best_rates(
+        [runner(None)] + [runner(make_client_mesh(d)) for d in sizes],
+        rounds, reps)
+    rate_un, mesh_rates = rates[0], rates[1:]
+    results["unsharded"] = rate_un
+    print(f"mesh=None (single-device engine): {rate_un:8.1f} rounds/s",
+          file=out)
+    for d, rate in zip(sizes, mesh_rates):
+        results["mesh"][str(d)] = rate
+        print(f"mesh={d} sharded engine         : {rate:8.1f} rounds/s "
+              f"({rate / rate_un:.2f}x vs unsharded)", file=out)
+
+    # headline: widest mesh vs the FASTER single-device variant (mesh=1 runs
+    # the same shard_map machinery on one device; mesh=None is the plain
+    # engine — comparing against the better of the two keeps us honest)
+    widest = max(int(s) for s in results["mesh"])
+    base = max(rate_un, results["mesh"]["1"])
+    results["speedup"] = results["mesh"][str(widest)] / base
+    print(f"speedup: {results['speedup']:.2f}x at {widest} devices vs best "
+          f"1-device engine (ceiling = physical cores, "
+          f"os.cpu_count()={os.cpu_count()})", file=out)
+
+    results["equiv_max_diff"] = equivalence_check(out=out)
+    results["equiv_ok"] = results["equiv_max_diff"] < EQUIV_TOL
+    return results
+
+
+def equivalence_check(rounds: int = 3, out=sys.stdout) -> float:
+    """Sharded (every power-of-2 mesh) vs unsharded trajectories, fixed
+    seed. Fp32 tolerance: cross-device psum changes fp reduction order."""
+    import jax
+    import jax.numpy as jnp
+    from repro.federated import run_training_scan
+    from repro.launch.mesh import make_client_mesh
+
+    params, loss, shards, flcfg = _make_task(16, 8)
+    params_ref, _ = run_training_scan(params, loss, shards, flcfg(None),
+                                      rounds=rounds, seed=0)
+    worst = 0.0
+    for d in _mesh_sizes(len(jax.devices())):
+        ps, _ = run_training_scan(params, loss, shards,
+                                  flcfg(make_client_mesh(d)),
+                                  rounds=rounds, seed=0)
+        diff = max(float(jnp.abs(a - b).max()) for a, b in
+                   zip(jax.tree.leaves(params_ref), jax.tree.leaves(ps)))
+        worst = max(worst, diff)
+        status = "OK" if diff < EQUIV_TOL else "FAIL"
+        print(f"equivalence mesh={d}: max|sharded-unsharded| = {diff:.2e}  "
+              f"[{status}]", file=out)
+    return worst
+
+
+def run(devices: int = 8, rounds: int = 30, reps: int = 5,
+        clients: int = 64, batch: int = 16, out=sys.stdout) -> dict:
+    """Entry point for benchmarks/run.py: re-exec with forced devices when
+    this process cannot see enough of them (JAX device count is fixed at
+    first import; only a fresh process can change it)."""
+    import jax
+    if len(jax.devices()) >= devices:
+        return run_local(devices, rounds, reps, clients, batch, out=out)
+
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    flags = " ".join(f for f in flags.split()
+                     if "--xla_force_host_platform_device_count" not in f)
+    env["XLA_FLAGS"] = (f"{flags} --xla_force_host_platform_device_count="
+                        f"{devices}").strip()
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    with_json = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "..", f".shard_bench_{os.getpid()}.json")
+    cmd = [sys.executable, "-m", "benchmarks.shard_engine_bench",
+           "--devices", str(devices), "--rounds", str(rounds),
+           "--reps", str(reps), "--clients", str(clients),
+           "--batch", str(batch), "--json", with_json]
+    print(f"# re-exec with XLA_FLAGS={env['XLA_FLAGS']!r}", file=out)
+    proc = subprocess.run(cmd, env=env, stdout=subprocess.PIPE,
+                          stderr=subprocess.STDOUT, text=True,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    print(proc.stdout, end="", file=out)
+    try:
+        with open(with_json) as f:
+            return json.load(f)
+    except OSError:
+        raise SystemExit(
+            f"[shard] subprocess failed (exit {proc.returncode})")
+    finally:
+        try:
+            os.remove(with_json)
+        except OSError:
+            pass
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--clients", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+    results = run(devices=args.devices, rounds=args.rounds, reps=args.reps,
+                  clients=args.clients, batch=args.batch)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+    return 0 if results.get("equiv_ok") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

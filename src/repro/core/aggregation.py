@@ -9,6 +9,11 @@ Two execution layouts are supported:
   added into a float32 accumulator with per-unit weights (large models; see
   DESIGN.md §3 two-phase recompute).
 
+The stacked layout additionally supports a *client-sharded* reduction
+(``aggregate_stacked(..., axis_name='clients')`` inside ``shard_map``): each
+device pre-reduces its local clients, then numerators and denominators are
+``psum``'d across the mesh so every device holds the same new global model.
+
 Both produce bitwise-identical semantics: Eq. 5
 ``Ĝ_u = Σ_k s[k,u]·w_k·Θ_{k,u} / Σ_m s[m,u]·w_m``.
 
@@ -41,13 +46,31 @@ def unit_weights(selection: jnp.ndarray,
 
 def aggregate_stacked(stacked_params: Pytree, umap: UnitMap,
                       selection: jnp.ndarray, data_sizes: jnp.ndarray,
-                      fallback: Pytree | None = None) -> Pytree:
+                      fallback: Pytree | None = None,
+                      axis_name: str | None = None) -> Pytree:
     """Eq. 5 over client-stacked params (every leaf has leading K).
 
     ``fallback`` (usually the previous global model) is used for any unit
     whose denominator is zero (cannot happen with top-n selection, which
     guarantees n ≥ 1 clients per unit, but can with dropout-style policies).
+
+    ``axis_name`` turns this into the cross-device reduction of a
+    client-sharded round (``shard_map`` over a ``'clients'`` mesh axis):
+    inputs are then the *local* shard — ``selection``/``data_sizes`` rows and
+    stacked leaves for this device's K/D clients. Each device pre-reduces
+    its own clients *unnormalised* (Σ_k s·w_k·Θ_k), then the numerators of
+    every leaf AND the Eq. 5 denominator travel in **one fused psum** (a
+    pytree collective) — one cross-device rendezvous per round instead of
+    one per parameter leaf, which is what makes the sharded round scale on
+    oversubscribed CPU meshes as well as real accelerator fabrics. The
+    division by Σ_m s·w_m happens after the collective, so the math matches
+    the unsharded call up to fp32 summation/normalisation order — hence the
+    sharded-vs-unsharded trajectory tests use a tight fp32 tolerance rather
+    than bit equality.
     """
+    if axis_name is not None:
+        return _aggregate_stacked_psum(stacked_params, umap, selection,
+                                       data_sizes, fallback, axis_name)
     w, denom = unit_weights(selection, data_sizes)          # (K,U), (U,)
     safe = jnp.where(denom > 0, denom, 1.0)
     frac = w / safe[None, :]                                # (K, U)
@@ -81,6 +104,82 @@ def aggregate_stacked(stacked_params: Pytree, umap: UnitMap,
         return jax.tree.map(combine, stacked_params[key], fsub)
 
     return {key: agg_one(key) for key in stacked_params}
+
+
+def stacked_psum_parts(stacked_params: Pytree, umap: UnitMap,
+                       selection: jnp.ndarray, data_sizes: jnp.ndarray
+                       ) -> tuple[Pytree, jnp.ndarray]:
+    """Device-local half of the client-sharded Eq. 5: unnormalised
+    numerators (Σ_k s·w_k·Θ_k per leaf, fp32) and the local denominator
+    rows' contribution (U,). Both are *additive* across the mesh axis, so
+    the caller can fold them — together with any other additive per-round
+    stats (loss sums, comm bytes) — into one fused ``psum``, then call
+    :func:`stacked_psum_finalize` on the reduced values."""
+    w, denom_loc = unit_weights(selection, data_sizes)      # local (K,U),(U,)
+    k = selection.shape[0]
+
+    def partial_one(key: str):
+        off, n = umap.spans[key]
+        seg = jax.lax.dynamic_slice(w, (0, off), (k, n))     # (K, n)
+
+        def num(leaf):
+            if n > 1:
+                wx = seg.reshape((k, n) + (1,) * (leaf.ndim - 2))
+            else:
+                wx = seg.reshape((k,) + (1,) * (leaf.ndim - 1))
+            return jnp.sum(leaf.astype(jnp.float32) * wx, axis=0)
+
+        return jax.tree.map(num, stacked_params[key])
+
+    return ({key: partial_one(key) for key in stacked_params}, denom_loc)
+
+
+def stacked_psum_finalize(partials: Pytree, denom: jnp.ndarray,
+                          umap: UnitMap, stacked_params: Pytree,
+                          fallback: Pytree | None) -> Pytree:
+    """Replicated epilogue of the client-sharded Eq. 5: divide the psum'd
+    numerators by the global denominator, fall back to the previous global
+    model for dead units, and cast back to the parameter dtype.
+    ``stacked_params`` is only consulted for leaf dtypes."""
+    safe = jnp.where(denom > 0, denom, 1.0)
+
+    def finalize_one(key: str):
+        off, n = umap.spans[key]
+        seg_d = jax.lax.dynamic_slice(denom, (off,), (n,))
+        seg_s = jax.lax.dynamic_slice(safe, (off,), (n,))
+
+        def fin(p, leaf, fb):
+            if n > 1:
+                out = p / seg_s.reshape((n,) + (1,) * (p.ndim - 1))
+                alive = (seg_d > 0).reshape((n,) + (1,) * (p.ndim - 1))
+            else:
+                out = p / seg_s[0]
+                alive = seg_d[0] > 0
+            if fb is not None:
+                out = jnp.where(alive, out, fb.astype(jnp.float32))
+            return out.astype(leaf.dtype)
+
+        fsub = fallback[key] if fallback is not None else None
+        if fsub is None:
+            return jax.tree.map(lambda p, leaf: fin(p, leaf, None),
+                                partials[key], stacked_params[key])
+        return jax.tree.map(fin, partials[key], stacked_params[key], fsub)
+
+    return {key: finalize_one(key) for key in stacked_params}
+
+
+def _aggregate_stacked_psum(stacked_params: Pytree, umap: UnitMap,
+                            selection: jnp.ndarray, data_sizes: jnp.ndarray,
+                            fallback: Pytree | None,
+                            axis_name: str) -> Pytree:
+    """Client-sharded Eq. 5 (see :func:`aggregate_stacked`): local
+    unnormalised partial sums, one fused (numerators, denominator) psum,
+    then the division/fallback epilogue replicated on every device."""
+    partials, denom_loc = stacked_psum_parts(stacked_params, umap,
+                                             selection, data_sizes)
+    partials, denom = jax.lax.psum((partials, denom_loc), axis_name)
+    return stacked_psum_finalize(partials, denom, umap, stacked_params,
+                                 fallback)
 
 
 def fedavg_stacked(stacked_params: Pytree, data_sizes: jnp.ndarray) -> Pytree:

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.units import UnitMap
@@ -21,10 +22,15 @@ DIVERGENCE_SCALAR_BYTES = 4  # float32 feedback scalars
 
 def round_comm(selection: jnp.ndarray, umap: UnitMap, *,
                divergence_feedback: bool = True,
-               param_bytes_override: float | None = None) -> dict:
+               param_bytes_override: float | None = None,
+               axis_name: str | None = None) -> dict:
     """Per-round communication in bytes.
 
-    selection: (K, U) ∈ {0,1}.
+    selection: (K, U) ∈ {0,1}. When the round runs client-sharded
+    (``shard_map`` over a ``'clients'`` mesh axis), pass the *local* rows
+    plus ``axis_name``: the payload sum and client count are ``psum``'d
+    across the axis, so every device returns the identical global totals —
+    no all-gather of the selection matrix is needed for accounting.
     Returns dict with jnp scalars:
       uplink_payload   — Σ_{k,u} s[k,u]·bytes(u)        (selected layers)
       uplink_feedback  — K·U·4 if divergence feedback is on (FedLDF only)
@@ -35,9 +41,13 @@ def round_comm(selection: jnp.ndarray, umap: UnitMap, *,
       savings_frac     — 1 − uplink_total/fedavg_uplink
     """
     k = selection.shape[0]
+    if axis_name is not None:
+        k = k * jax.lax.psum(1, axis_name)   # global K across the mesh
     scale = 1.0 if param_bytes_override is None else param_bytes_override / 4.0
     unit_bytes = umap.unit_bytes_array() * scale
     payload = jnp.sum(selection * unit_bytes[None, :])
+    if axis_name is not None:
+        payload = jax.lax.psum(payload, axis_name)
     feedback = jnp.float32(
         k * umap.num_units * DIVERGENCE_SCALAR_BYTES if divergence_feedback
         else 0.0)

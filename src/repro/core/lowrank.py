@@ -16,7 +16,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.units import UnitMap, tree_sub
+from repro.core.units import tree_sub
 
 Pytree = Any
 

@@ -63,6 +63,27 @@ class ClientShards:
             x_key=fldata.x_key, y_key=fldata.y_key)
 
     # ------------------------------------------------------------------
+    def place(self, mesh) -> "ClientShards":
+        """Replicate the dataset over a device mesh (client-sharded engine).
+
+        The global arrays are *replicated* (PartitionSpec()) rather than
+        sharded: any device may need any sample, because the per-round
+        participant set is a random subset of all N clients. With a local
+        replica everywhere, the round-batch gather partitions cleanly over
+        the 'clients' axis — each device reads only its own K/D clients'
+        rows and no cross-device traffic happens during data loading.
+        (Sharding the *sample* axis instead is the model/data-axis follow-on
+        tracked in ROADMAP.md.)
+        """
+        from jax.sharding import NamedSharding, PartitionSpec
+        rep = NamedSharding(mesh, PartitionSpec())
+        return ClientShards(
+            xs=jax.device_put(self.xs, rep), ys=jax.device_put(self.ys, rep),
+            part_idx=jax.device_put(self.part_idx, rep),
+            part_sizes=jax.device_put(self.part_sizes, rep),
+            x_key=self.x_key, y_key=self.y_key)
+
+    # ------------------------------------------------------------------
     def gather(self, clients: jnp.ndarray, batch: int,
                key: jax.Array) -> dict:
         """Stacked (K, batch, ...) round batch, fully on device.

@@ -8,7 +8,6 @@ clients) or ``lax.scan`` (sequential clients) — see federated/server.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import numpy as np
 

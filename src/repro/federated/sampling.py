@@ -37,6 +37,22 @@ def sample_clients_jax(key: jax.Array, num_clients: int,
     return jax.random.choice(key, num_clients, shape=(k,), replace=False)
 
 
+def local_rows(arr: jnp.ndarray, axis_name: str, shard_size: int
+               ) -> jnp.ndarray:
+    """This device's contiguous row block of a replicated, participant-
+    indexed array (inside ``shard_map``).
+
+    The client-sharded round keeps sampling *replicated* — every device
+    computes the same K participants from the same key — and splits the
+    round by position: device i owns rows [i·K/D, (i+1)·K/D). ``arr`` is any
+    (K, ...) array aligned with the participant order (selection matrix,
+    divergence rows, client ids); the result is this device's (K/D, ...)
+    block, matching how P('clients') in_specs split the stacked batch.
+    """
+    row0 = jax.lax.axis_index(axis_name) * shard_size
+    return jax.lax.dynamic_slice_in_dim(arr, row0, shard_size, axis=0)
+
+
 def round_keys(base_key: jax.Array, t) -> tuple[jax.Array, jax.Array,
                                                 jax.Array]:
     """Per-round (client_key, batch_key, algo_key) streams.

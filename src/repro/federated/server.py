@@ -29,6 +29,16 @@ Two *multi-round* drivers share those round functions:
   seed (tested to fp32 tolerance; see benchmarks/round_engine_bench.py for
   the rounds/sec comparison).
 
+Both drivers scale past one accelerator via client-axis sharding: with
+``FLConfig(mesh=make_client_mesh(...))`` the vmap round runs under
+``shard_map`` over the mesh's 'clients' axis — each device trains K/D
+clients, FedLDF's divergence matrix is all-gathered for the global top-n
+selection, and the Eq. 5 aggregation / comm totals are psum-reduced, so the
+new global model comes back replicated. ``mesh=None`` (default) is the
+original single-device path, byte-for-byte unchanged. Sharded and unsharded
+trajectories agree to fp32 tolerance on a fixed seed (the reduction order
+differs; tests/test_shard_engine.py pins this down for mesh sizes 1/2/4).
+
 Algorithms: fedldf (paper), fedavg (Eq. 1), random (per-layer random-n),
 hdfl (client dropout [7]), fedadp (neuron pruning [6], vmap mode only).
 """
@@ -42,6 +52,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import aggregation as agg
 from repro.core import comm as comm_mod
@@ -50,8 +61,10 @@ from repro.core import selection as sel
 from repro.core.units import UnitMap
 from repro.data.device import ClientShards
 from repro.federated.client import make_local_update
-from repro.federated.sampling import (round_keys, sample_clients,
+from repro.federated.sampling import (local_rows, round_keys, sample_clients,
                                       sample_clients_jax)
+from repro.launch.mesh import (CLIENT_AXIS, client_mesh_size,
+                               shard_map_norep)
 from repro.optim import sgd
 from repro.optim.opt import Optimizer
 
@@ -77,6 +90,9 @@ class FLConfig:
     # beyond-paper: quantized delta upload (0 = off) + error feedback
     quantize_bits: int = 0
     error_feedback: bool = False
+    # multi-device: shard the stacked client axis over this mesh's 'clients'
+    # axis (make_client_mesh). None = single-device round, unchanged.
+    mesh: Optional[Mesh] = None
 
     def __post_init__(self):
         assert self.algo in ALGOS, self.algo
@@ -86,6 +102,14 @@ class FLConfig:
             assert self.quantize_bits > 0, "error feedback needs quantization"
             assert self.algo != "fedadp", \
                 "fedadp aggregates pruned neurons, not quantized deltas"
+        if self.mesh is not None:
+            assert self.mode == "vmap", \
+                "client-axis sharding needs stacked clients (mode='vmap')"
+            assert self.algo != "fedadp", \
+                "fedadp's cross-client neuron pruning is not sharded yet"
+            d = client_mesh_size(self.mesh)
+            assert self.clients_per_round % d == 0, \
+                f"K={self.clients_per_round} must divide over {d} devices"
 
 
 def _select(algo: str, divs: Optional[jnp.ndarray], key, k: int, u: int,
@@ -104,12 +128,137 @@ def _select(algo: str, divs: Optional[jnp.ndarray], key, k: int, u: int,
 # ======================================================================
 # Round builders
 # ======================================================================
+def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig):
+    """Client-sharded round: ``shard_map`` over the mesh's 'clients' axis.
+
+    Every device trains its K/D local clients (vmap over the local stack),
+    then the round is stitched back together with collectives:
+
+    - FedLDF divergence feedback: per-device (K/D, U) divergence blocks are
+      ``all_gather``'d into the full (K, U) matrix so the top-n selection —
+      which needs *all* clients' divergences (Eq. 4) — is computed
+      replicated on every device; each device then slices back its own rows.
+    - Aggregation (Eq. 5), the loss sum, and the (additive) comm-byte
+      totals all travel in ONE fused ``psum``: local unnormalised
+      numerators/denominator from
+      :func:`repro.core.aggregation.stacked_psum_parts`, local
+      :func:`repro.core.comm.round_comm` byte counts, one collective, then
+      the replicated division epilogue (``stacked_psum_finalize``) — a
+      single cross-device rendezvous per round instead of one per
+      parameter leaf. (:func:`~repro.core.aggregation.aggregate_stacked`
+      with ``axis_name`` / ``round_comm(axis_name=...)`` offer the same
+      reductions as standalone calls.)
+    - Error-feedback residuals stay device-local (out_spec P('clients'));
+      the driver's store scatter handles the replicated-store update.
+
+    Outputs are replicated by construction (psum/all_gather/replicated
+    inputs); replication *checking* is disabled — see
+    :func:`repro.launch.mesh.shard_map_norep` — and covered by the
+    equivalence tests instead (tests/test_shard_engine.py).
+    """
+    mesh, ax = flcfg.mesh, CLIENT_AXIS
+    d = client_mesh_size(mesh)
+    k = flcfg.clients_per_round
+    kloc = k // d
+
+    def body(params, batch, data_sizes, key, residuals):
+        # everything in here sees the LOCAL shard: kloc clients per device
+        locals_, losses = jax.vmap(local_update, in_axes=(None, 0))(
+            params, batch)
+
+        divs = None
+        if flcfg.algo == "fedldf":
+            divs_loc = jax.vmap(lambda p: umap.divergence(p, params))(locals_)
+            divs = jax.lax.all_gather(divs_loc, ax, axis=0, tiled=True)
+        selection = _select(flcfg.algo, divs, key, k, umap.num_units,
+                            flcfg.top_n)                       # (K, U), repl.
+        sel_loc = local_rows(selection, ax, kloc)
+
+        metrics_extra = {}
+        if flcfg.quantize_bits:
+            from repro.core.compress import compress_upload
+            theta_hat, cand_res = jax.vmap(
+                lambda loc, res: compress_upload(
+                    loc, params, umap, flcfg.quantize_bits, res),
+                in_axes=(0, 0 if residuals is not None else None),
+            )(locals_, residuals)
+            locals_agg = theta_hat
+            if flcfg.error_feedback:
+                def keep_where_selected(kidx_res, kidx_old, sel_row):
+                    gate = umap.expand_to_leaves(kidx_res, sel_row)
+                    old = kidx_old if kidx_old is not None else \
+                        agg.streaming_init(params)
+                    return jax.tree.map(
+                        lambda g_, n_, o_: g_ * n_ + (1 - g_) * o_,
+                        gate, kidx_res, old)
+
+                new_residuals = jax.vmap(
+                    keep_where_selected,
+                    in_axes=(0, 0 if residuals is not None else None, 0),
+                )(cand_res, residuals, sel_loc)
+                metrics_extra["residuals"] = new_residuals
+        else:
+            locals_agg = locals_
+
+        # ONE fused cross-device reduction per round: the Eq. 5 numerators/
+        # denominator, the loss sum, and the (additive) comm-byte totals
+        # all ride the same psum — a single rendezvous instead of one per
+        # parameter leaf, which is what keeps the sharded round scaling on
+        # oversubscribed CPU meshes as well as accelerator fabrics.
+        parts, denom_loc = agg.stacked_psum_parts(locals_agg, umap, sel_loc,
+                                                  data_sizes)
+        comm_loc = comm_mod.round_comm(
+            sel_loc, umap,
+            divergence_feedback=(flcfg.algo == "fedldf"),
+            param_bytes_override=(flcfg.quantize_bits / 8.0
+                                  if flcfg.quantize_bits else None))
+        comm_add = {n_: v for n_, v in comm_loc.items()
+                    if n_ != "savings_frac"}   # byte counts are additive
+        (parts, denom), loss_sum, comm = jax.lax.psum(
+            ((parts, denom_loc), losses.sum(), comm_add), ax)
+        new_params = agg.stacked_psum_finalize(parts, denom, umap,
+                                               locals_agg, params)
+        comm["savings_frac"] = 1.0 - comm["uplink_total"] / \
+            comm["fedavg_uplink"]
+        loss = loss_sum / k
+        return new_params, {"loss": loss, "comm": comm,
+                            "selection": selection, **metrics_extra}
+
+    out_metrics_spec = {"loss": P(), "comm": P(), "selection": P()}
+    if flcfg.quantize_bits and flcfg.error_feedback:
+        sharded = shard_map_norep(
+            body, mesh,
+            in_specs=(P(), P(ax), P(ax), P(), P(ax)),
+            out_specs=(P(), {**out_metrics_spec, "residuals": P(ax)}))
+
+        def round_fn(params, batch, data_sizes, key, residuals):
+            return sharded(params, batch, data_sizes, key, residuals)
+    else:
+        sharded = shard_map_norep(
+            lambda p, b, s, key: body(p, b, s, key, None), mesh,
+            in_specs=(P(), P(ax), P(ax), P()),
+            out_specs=(P(), out_metrics_spec))
+
+        def round_fn(params, batch, data_sizes, key, residuals=None):
+            return sharded(params, batch, data_sizes, key)
+
+    return round_fn
+
+
 def build_round_vmap(loss_fn, umap: UnitMap, flcfg: FLConfig,
                      opt: Optimizer | None = None):
-    """Round function with parallel (stacked) clients."""
+    """Round function with parallel (stacked) clients.
+
+    With ``flcfg.mesh`` set, the client axis is sharded over the mesh's
+    'clients' axis (every device trains K/D clients; aggregation is a
+    cross-device psum) — same signature, same semantics, fp32-tolerance
+    identical trajectories.
+    """
     opt = opt or sgd(flcfg.lr)
     local_update = make_local_update(loss_fn, opt, flcfg.local_steps,
                                      remat=flcfg.remat)
+    if flcfg.mesh is not None:
+        return _build_round_vmap_sharded(local_update, umap, flcfg)
     k = flcfg.clients_per_round
 
     def round_fn(params: Pytree, batch: dict, data_sizes: jnp.ndarray,
@@ -331,11 +480,17 @@ def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
     round_fn = _cached("round", loss_fn, umap, flcfg,
                        lambda: jax.jit(build_round_fn(loss_fn, umap, flcfg)))
     log = TrainLog()
+    if flcfg.mesh is not None:
+        # replicate the global model (and EF store) over the client mesh so
+        # the sharded round starts from device-local copies everywhere
+        params = jax.device_put(params, NamedSharding(flcfg.mesh, P()))
     residuals = (init_residual_store(params, flcfg.num_clients)
                  if flcfg.error_feedback else None)
     if sampler == "jax":
         shards = (fldata if isinstance(fldata, ClientShards)
                   else ClientShards.from_federated(fldata))
+        if flcfg.mesh is not None:
+            shards = shards.place(flcfg.mesh)
         all_sizes_dev = shards.data_sizes()
         base_key = jax.random.PRNGKey(seed)
     else:
@@ -402,6 +557,11 @@ def _build_block_fn(loss_fn, umap: UnitMap, flcfg: FLConfig):
     """
     round_fn = build_round_fn(loss_fn, umap, flcfg)
     ef = flcfg.error_feedback
+    # client-sharded engine: pin the gathered round batch (and EF rows) to
+    # the 'clients' axis so XLA partitions the gather itself — each device
+    # materialises only its own K/D clients' samples, never the full batch.
+    client_spec = (NamedSharding(flcfg.mesh, P(CLIENT_AXIS))
+                   if flcfg.mesh is not None else None)
 
     def one_round(carry, t, shards, all_sizes, base_key):
         params, residuals, acc = carry
@@ -410,8 +570,14 @@ def _build_block_fn(loss_fn, umap: UnitMap, flcfg: FLConfig):
                                      flcfg.clients_per_round)
         batch = shards.gather(clients, flcfg.batch_per_client, bk)
         sizes = all_sizes[clients]
+        if client_spec is not None:
+            batch = jax.lax.with_sharding_constraint(batch, client_spec)
+            sizes = jax.lax.with_sharding_constraint(sizes, client_spec)
         if ef:
             res_rows = _gather_rows(residuals, clients)
+            if client_spec is not None:
+                res_rows = jax.lax.with_sharding_constraint(
+                    res_rows, client_spec)
             params, metrics = round_fn(params, batch, sizes, ak, res_rows)
             residuals = _scatter_rows(residuals, clients,
                                       metrics.pop("residuals"))
@@ -461,6 +627,9 @@ def run_training_scan(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
     ef = flcfg.error_feedback
     run_block = _cached("block", loss_fn, umap, flcfg,
                         lambda: _build_block_fn(loss_fn, umap, flcfg))
+    if flcfg.mesh is not None:
+        params = jax.device_put(params, NamedSharding(flcfg.mesh, P()))
+        shards = shards.place(flcfg.mesh)
     if jax.default_backend() in ("tpu", "gpu"):
         # run_block donates its carry; copy once so the caller's param
         # buffers survive the first block (residuals/acc are fresh).

@@ -237,8 +237,6 @@ def _conv_flops(ins: Instr, symtab: dict[str, Instr]) -> float:
     if wm:
         for d in wm.group(1).split("x"):
             window *= int(d)
-    gm = re.search(r"feature_group_count=(\d+)", ins.text)
-    groups = int(gm.group(1)) if gm else 1
     in_feat = 1
     if len(ins.operands) >= 2:
         ker = symtab.get(ins.operands[1])

@@ -58,8 +58,6 @@ def collective_bytes(hlo_text: str) -> dict[str, float]:
         if "=" not in stripped:
             continue
         lhs, _, rhs = stripped.partition("=")
-        m = re.match(r"\s*(?:\(.*?\)|\S+\[.*?\]\S*)?\s*([a-z0-9\-]+)\(",
-                     rhs.strip())
         opname = None
         for op in COLLECTIVE_OPS:
             # match op at the start of the instruction (after result shape)

@@ -17,7 +17,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import save_pytree
 from repro.configs import ARCH_IDS, get_config, vgg9_fl

@@ -12,7 +12,6 @@ Design notes (TPU adaptation):
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

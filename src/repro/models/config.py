@@ -8,9 +8,6 @@ audio enc-dec / vlm); family-specific fields are zero/None when unused.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
-
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)

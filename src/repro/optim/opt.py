@@ -6,7 +6,6 @@ the serving-model pre-training example.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

@@ -1,5 +1,30 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches run on
-the single real CPU device; only launch/dryrun.py (own process) forces 512."""
+"""Shared fixtures + deterministic device environment.
+
+The JAX device count is frozen at first import, so it MUST be pinned before
+any test module imports jax — otherwise the suite silently runs with
+whatever device count the ambient environment happens to force, and
+"passes locally, differs in CI" bugs appear. Policy:
+
+- platform defaults to CPU (``JAX_PLATFORMS=cpu``) unless the caller set it;
+- the forced host-device count defaults to 1 (the seed behaviour) and is
+  raised explicitly via ``REPRO_TEST_DEVICES=8`` (what the CI sharded job
+  sets) or by passing ``--xla_force_host_platform_device_count`` yourself;
+- launch/dryrun.py still forces 512 devices in its own subprocess — that
+  path overrides XLA_FLAGS itself and is unaffected.
+
+Sharding tests (tests/test_shard_engine.py) skip cleanly when fewer devices
+are visible than a case needs, so the default single-device run stays green.
+"""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    _n = os.environ.get("REPRO_TEST_DEVICES", "1")
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_n}").strip()
+
 import numpy as np
 import pytest
 

@@ -4,8 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.compress import (compress_upload, dequantize_unit,
-                                 quantize_unit_symmetric)
+from repro.core.compress import compress_upload, quantize_unit_symmetric
 from repro.core.units import UnitMap
 from repro.federated import FLConfig, build_round_fn
 from repro.models import cnn

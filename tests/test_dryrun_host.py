@@ -8,7 +8,6 @@ guards the machinery itself in CI.
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_config

@@ -1,5 +1,4 @@
 """Federated runtime: mode equivalence, algorithm semantics, e2e training."""
-import functools
 
 import jax
 import jax.numpy as jnp

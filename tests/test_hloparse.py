@@ -2,7 +2,6 @@
 (the while-body undercount of cost_analysis() is the reason this exists)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import hloparse

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.lowrank import _lowrank_approx, lowrank_bytes, lowrank_upload
 from repro.models import cnn

@@ -1,0 +1,238 @@
+"""Client-axis sharding: sharded-vs-single-device trajectory equivalence.
+
+Runs the federated round engine with the stacked client axis sharded over a
+'clients' mesh of 1/2/4 devices and checks the trajectory (params, losses,
+comm totals) against the unsharded ``mesh=None`` reference on a fixed seed.
+
+Needs forced host devices: run with ``REPRO_TEST_DEVICES=8`` (see
+tests/conftest.py) or ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+— multi-device cases skip cleanly on a plain single-device run. Tolerance
+is fp32-tight, not bit-exact: the sharded aggregation pre-reduces each
+device's clients before the cross-device psum, which changes the fp32
+summation order (documented in core/aggregation.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.round_engine_bench import EQUIV_TOL
+from repro.data import FederatedData, iid_partition, make_image_dataset
+from repro.federated import FLConfig, run_training, run_training_scan
+from repro.launch.mesh import make_client_mesh
+
+N_CLIENTS, K = 8, 4
+ATOL = EQUIV_TOL   # single source: host-vs-scan and sharded-vs-unsharded
+                   # agreement share one fp32 threshold
+
+needs_devices = [
+    pytest.param(d, marks=pytest.mark.skipif(
+        len(jax.devices()) < d,
+        reason=f"needs {d} devices; set REPRO_TEST_DEVICES=8 (or XLA_FLAGS="
+               "--xla_force_host_platform_device_count=8)"))
+    for d in (1, 2, 4)
+]
+
+
+def _mlp_params(key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 2)
+    return {
+        "l1": {"w": jax.random.normal(ks[0], (3072, 16)) * 0.02,
+               "b": jnp.zeros((16,))},
+        "head": {"w": jax.random.normal(ks[1], (16, 10)) * 0.1,
+                 "b": jnp.zeros((10,))},
+    }
+
+
+def _loss(params, batch):
+    x = batch["images"].reshape(batch["images"].shape[0], -1)
+    h = jax.nn.relu(x @ params["l1"]["w"] + params["l1"]["b"])
+    logits = h @ params["head"]["w"] + params["head"]["b"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, batch["labels"][:, None],
+                                axis=-1).mean()
+
+
+@pytest.fixture(scope="module")
+def task():
+    train, _ = make_image_dataset(num_train=320, num_test=16, seed=1)
+    parts = iid_partition(train.ys, N_CLIENTS, seed=0)
+    data = FederatedData(train.xs, train.ys, parts)
+    return _mlp_params(), data
+
+
+def _assert_trees_close(a, b, atol=ATOL):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol)
+
+
+def _cfg(mesh, algo="fedldf", **kw):
+    return FLConfig(algo=algo, num_clients=N_CLIENTS, clients_per_round=K,
+                    top_n=2, mode="vmap", batch_per_client=8, mesh=mesh,
+                    **kw)
+
+
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("algo", ["fedldf", "fedavg"])
+@pytest.mark.parametrize("mesh_size", needs_devices)
+def test_sharded_engine_matches_unsharded(task, algo, mesh_size):
+    """Fixed seed ⇒ same trajectory across mesh sizes 1/2/4 and mesh=None,
+    for the paper algorithm (divergence all-gather + top-n) and FedAvg."""
+    params, data = task
+    p0, l0 = run_training_scan(params, _loss, data, _cfg(None, algo),
+                               rounds=4, seed=3)
+    p1, l1 = run_training_scan(params, _loss, data,
+                               _cfg(make_client_mesh(mesh_size), algo),
+                               rounds=4, seed=3)
+    _assert_trees_close(p0, p1)
+    np.testing.assert_allclose(l0.losses, l1.losses, atol=ATOL)
+    assert l0.meter.uplink_bytes == pytest.approx(l1.meter.uplink_bytes)
+    assert l0.meter.downlink_bytes == pytest.approx(l1.meter.downlink_bytes)
+    assert l1.meter.rounds == 4
+
+
+@pytest.mark.parametrize("mesh_size", needs_devices)
+def test_sharded_host_driver_matches_engine(task, mesh_size):
+    """The host-loop driver under a mesh agrees with the scanned engine
+    under the same mesh (shared key schedule)."""
+    params, data = task
+    mesh = make_client_mesh(mesh_size)
+    ph, lh = run_training(params, _loss, data, _cfg(mesh), rounds=3, seed=0,
+                          sampler="jax")
+    ps, ls = run_training_scan(params, _loss, data, _cfg(mesh), rounds=3,
+                               seed=0)
+    _assert_trees_close(ph, ps)
+    assert lh.meter.uplink_bytes == pytest.approx(ls.meter.uplink_bytes)
+
+
+@pytest.mark.parametrize("mesh_size", needs_devices)
+def test_residual_store_under_sharding(task, mesh_size):
+    """Error-feedback residuals: per-client rows gathered/scattered through
+    the sharded round must reproduce the unsharded EF trajectory — and EF
+    must still have its cross-round effect (the PR-1 regression) when the
+    rows live sharded across devices."""
+    params, data = task
+
+    def efcfg(mesh, ef):
+        return _cfg(mesh, quantize_bits=4, error_feedback=ef)
+
+    mesh = make_client_mesh(mesh_size)
+    p0, _ = run_training_scan(params, _loss, data, efcfg(None, True),
+                              rounds=3, seed=0)
+    p1, _ = run_training_scan(params, _loss, data, efcfg(mesh, True),
+                              rounds=3, seed=0)
+    _assert_trees_close(p0, p1)
+    # EF-on vs EF-off must diverge after round 1 under sharding too
+    p_off, _ = run_training_scan(params, _loss, data, efcfg(mesh, False),
+                                 rounds=3, seed=0)
+    diff = max(float(jnp.abs(a - b).max()) for a, b in
+               zip(jax.tree.leaves(p1), jax.tree.leaves(p_off)))
+    assert diff > 1e-6, "error feedback lost its effect under sharding"
+
+
+@pytest.mark.parametrize("mesh_size", needs_devices)
+def test_quantized_upload_no_ef_under_sharding(task, mesh_size):
+    """Quantized uploads without error feedback (residuals=None inside the
+    shard_map body) also match the unsharded path."""
+    params, data = task
+    p0, l0 = run_training_scan(params, _loss, data,
+                               _cfg(None, quantize_bits=4), rounds=2, seed=0)
+    p1, l1 = run_training_scan(params, _loss, data,
+                               _cfg(make_client_mesh(mesh_size),
+                                    quantize_bits=4), rounds=2, seed=0)
+    _assert_trees_close(p0, p1)
+    assert l0.meter.uplink_bytes == pytest.approx(l1.meter.uplink_bytes)
+
+
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("mesh_size", needs_devices)
+def test_round_comm_axis_name_matches_global(mesh_size):
+    """Sharded comm accounting: psum'ing local selection rows inside
+    shard_map must reproduce the global round_comm totals exactly (byte
+    counts are integer-valued floats — no tolerance needed)."""
+    from functools import partial
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.comm import round_comm
+    from repro.core.units import UnitMap
+    from repro.launch.mesh import shard_map_norep
+
+    params = _mlp_params()
+    umap = UnitMap.build(params)
+    k = 4
+    selection = jnp.asarray(
+        np.random.default_rng(0).integers(0, 2, (k, umap.num_units)),
+        jnp.float32)
+    want = round_comm(selection, umap)
+    mesh = make_client_mesh(mesh_size)
+    got = shard_map_norep(
+        partial(round_comm, umap=umap, axis_name="clients"), mesh,
+        in_specs=P("clients"), out_specs=P())(selection)
+    for key in want:
+        assert float(want[key]) == pytest.approx(float(got[key])), key
+
+
+@pytest.mark.parametrize("mesh_size", needs_devices)
+def test_aggregate_stacked_axis_name_matches_global(mesh_size):
+    """The standalone sharded entry point — aggregate_stacked(...,
+    axis_name='clients') on local rows inside shard_map — must reproduce
+    the global unsharded aggregation, including zero-denominator fallback
+    units (one column is forced dead)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import aggregation as agg
+    from repro.core.units import UnitMap
+    from repro.launch.mesh import shard_map_norep
+
+    params = _mlp_params()
+    umap = UnitMap.build(params)
+    k = 4
+    rng = np.random.default_rng(1)
+    stacked = jax.tree.map(
+        lambda l: jnp.asarray(rng.normal(size=(k,) + l.shape), jnp.float32),
+        params)
+    selection = jnp.asarray(rng.integers(0, 2, (k, umap.num_units)),
+                            jnp.float32).at[:, 0].set(0.0)   # dead unit
+    sizes = jnp.asarray(rng.integers(1, 50, (k,)), jnp.float32)
+    want = agg.aggregate_stacked(stacked, umap, selection, sizes,
+                                 fallback=params)
+    mesh = make_client_mesh(mesh_size)
+    got = shard_map_norep(
+        lambda st, sel, sz: agg.aggregate_stacked(
+            st, umap, sel, sz, fallback=params, axis_name="clients"),
+        mesh, in_specs=(P("clients"), P("clients"), P("clients")),
+        out_specs=P())(stacked, selection, sizes)
+    _assert_trees_close(want, got, atol=1e-6)
+
+
+def test_mesh_config_validation():
+    """FLConfig rejects meshes the sharded round can't honour."""
+    if len(jax.devices()) >= 2:
+        mesh = make_client_mesh(2)
+        with pytest.raises(AssertionError):   # K=5 not divisible by 2
+            FLConfig(num_clients=10, clients_per_round=5, top_n=2, mesh=mesh)
+        with pytest.raises(AssertionError):   # scan mode can't shard clients
+            FLConfig(num_clients=8, clients_per_round=4, top_n=2,
+                     mode="scan", mesh=mesh)
+    from repro.launch.mesh import client_mesh_size, make_host_mesh
+    with pytest.raises(ValueError):           # no 'clients' axis
+        client_mesh_size(make_host_mesh(1, 1))
+    with pytest.raises(ValueError):           # more devices than exist
+        make_client_mesh(len(jax.devices()) + 1)
+
+
+def test_client_shards_place_preserves_gather(task):
+    """Mesh placement (replication) must not change gathered batches."""
+    from repro.data import ClientShards
+    _, data = task
+    shards = ClientShards.from_federated(data)
+    placed = shards.place(make_client_mesh(len(jax.devices())))
+    clients = jnp.array([1, 3, 5, 6])
+    key = jax.random.PRNGKey(7)
+    b0 = shards.gather(clients, 4, key)
+    b1 = placed.gather(clients, 4, key)
+    np.testing.assert_array_equal(np.asarray(b0["images"]),
+                                  np.asarray(b1["images"]))
+    np.testing.assert_array_equal(np.asarray(b0["labels"]),
+                                  np.asarray(b1["labels"]))

@@ -1,7 +1,6 @@
 """Auto-sharding policy: divisibility fallbacks, Megatron/FSDP defaults."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

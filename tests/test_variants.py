@@ -1,7 +1,5 @@
 """§Perf variant machinery: config transforms + sharding overrides."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
