@@ -25,8 +25,12 @@ from benchmarks/run.py after JAX already initialised the single real CPU
 device), the benchmark re-executes itself in a subprocess with XLA_FLAGS
 set, streams its output, and returns the parsed results.
 
-Also re-checks sharded-vs-unsharded trajectory equivalence on a fixed seed
-(fp32 tolerance — reduction order differs across mesh sizes).
+Also measures one 2-D ('clients', 'model') mesh point — the FSDP
+configuration where params (and the EF residual store) live 1/M per device
+— reporting both rounds/sec and the at-rest per-device param bytes, and
+re-checks sharded-vs-unsharded trajectory equivalence on a fixed seed
+(fp32 tolerance — reduction order differs across mesh sizes) including the
+2-D mesh.
 """
 from __future__ import annotations
 
@@ -153,6 +157,32 @@ def run_local(devices: int = 8, rounds: int = 30, reps: int = 5,
           f"1-device engine (ceiling = physical cores, "
           f"os.cpu_count()={os.cpu_count()})", file=out)
 
+    # 2-D ('clients', 'model') mesh: the FSDP point — same round math, but
+    # params (and the EF store, when on) live 1/M per device. Rate is
+    # expected at-or-below the pure clients-split (training all-gathers the
+    # model transiently); the per-device at-rest bytes are the win.
+    total = min(devices, len(jax.devices()))
+    model = 2
+    # skip (don't crash) when the 2-D factorisation doesn't fit: model must
+    # divide the device count and K (= clients, full participation) must
+    # divide the resulting clients axis
+    if total % model == 0 and clients % (total // model) == 0:
+        mesh2d = make_client_mesh(total, model=model)
+        results["model_mesh"] = {
+            "model": model, "clients_axis": total // model,
+            "rate": _best_rates([runner(mesh2d)], rounds, reps)[0]}
+        p2d, _ = run_training_scan(params, loss, shards, flcfg(mesh2d),
+                                   rounds=1, seed=0)
+        dev_b = sum(x.addressable_shards[0].data.nbytes
+                    for x in jax.tree.leaves(p2d))
+        tot_b = sum(x.nbytes for x in jax.tree.leaves(p2d))
+        results["model_mesh"]["param_bytes_per_device"] = dev_b
+        results["model_mesh"]["param_bytes_total"] = tot_b
+        print(f"mesh=({total // model}x{model}) clients x model   : "
+              f"{results['model_mesh']['rate']:8.1f} rounds/s; at-rest "
+              f"param bytes/device {dev_b} vs {tot_b} replicated "
+              f"({dev_b / tot_b:.2f}x)", file=out)
+
     results["equiv_max_diff"] = equivalence_check(out=out)
     results["equiv_ok"] = results["equiv_max_diff"] < EQUIV_TOL
     return results
@@ -170,16 +200,21 @@ def equivalence_check(rounds: int = 3, out=sys.stdout) -> float:
     params_ref, _ = run_training_scan(params, loss, shards, flcfg(None),
                                       rounds=rounds, seed=0)
     worst = 0.0
-    for d in _mesh_sizes(len(jax.devices())):
+    meshes = [(d, 1) for d in _mesh_sizes(len(jax.devices()))]
+    ndev = len(jax.devices())     # 2-D ('clients', 'model') FSDP point,
+    if ndev % 2 == 0 and 16 % (ndev // 2) == 0:   # K=16 clients above
+        meshes.append((ndev, 2))
+    for d, model in meshes:
         ps, _ = run_training_scan(params, loss, shards,
-                                  flcfg(make_client_mesh(d)),
+                                  flcfg(make_client_mesh(d, model=model)),
                                   rounds=rounds, seed=0)
         diff = max(float(jnp.abs(a - b).max()) for a, b in
                    zip(jax.tree.leaves(params_ref), jax.tree.leaves(ps)))
         worst = max(worst, diff)
         status = "OK" if diff < EQUIV_TOL else "FAIL"
-        print(f"equivalence mesh={d}: max|sharded-unsharded| = {diff:.2e}  "
-              f"[{status}]", file=out)
+        label = f"{d}" if model == 1 else f"{d // model}x{model}"
+        print(f"equivalence mesh={label}: max|sharded-unsharded| = "
+              f"{diff:.2e}  [{status}]", file=out)
     return worst
 
 

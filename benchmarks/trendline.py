@@ -1,0 +1,112 @@
+"""Perf trendline: diff a BENCH_ci.json against the previous run's artifact.
+
+    python benchmarks/trendline.py --prev prev/BENCH_ci.json \
+        --curr BENCH_ci.json [--threshold 0.2] [--strict]
+
+CI (ci.yml `bench-trend` job) fetches the previous push's ``BENCH_ci``
+artifact and runs this after every bench-smoke, so rounds/sec and the
+``[shard]`` speedup get a regression gate instead of only a recorded
+trajectory (the ROADMAP "CI perf trendline" item). The gate is
+**fail-soft** by default: regressions beyond the threshold print GitHub
+``::warning::`` annotations and the exit code stays 0 — CI bench runners
+are noisy shared machines, so a hard gate would flake; ``--strict`` turns
+regressions into a non-zero exit for local use.
+
+Only stdlib — runnable without PYTHONPATH or jax.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# metric path -> human label. Higher is better for every tracked metric
+# (rates and speedups), so a regression is curr < (1 - threshold) * prev.
+TRACKED = {
+    ("engine", "host_rate"): "[engine] host-loop rounds/sec",
+    ("engine", "scan_rate"): "[engine] scan-engine rounds/sec",
+    ("engine", "speedup"): "[engine] scan-vs-host speedup",
+    ("shard", "unsharded"): "[shard] unsharded rounds/sec",
+    ("shard", "speedup"): "[shard] widest-mesh speedup",
+}
+
+
+def extract(results: dict) -> dict[str, float]:
+    """Flatten the tracked metrics (plus per-mesh [shard] rates) out of a
+    benchmarks/run.py --json dump. Missing sections are skipped — the
+    comparison only covers metrics present in BOTH runs."""
+    out: dict[str, float] = {}
+    for (section, key), _ in TRACKED.items():
+        val = (results.get(section) or {}).get(key)
+        if isinstance(val, (int, float)):
+            out[f"{section}.{key}"] = float(val)
+    for d, rate in ((results.get("shard") or {}).get("mesh") or {}).items():
+        if isinstance(rate, (int, float)):
+            out[f"shard.mesh.{d}"] = float(rate)
+    model = (results.get("shard") or {}).get("model_mesh") or {}
+    if isinstance(model.get("rate"), (int, float)):
+        out["shard.model_mesh.rate"] = float(model["rate"])
+    return out
+
+
+def compare(prev: dict[str, float], curr: dict[str, float],
+            threshold: float = 0.2) -> tuple[list[str], list[str]]:
+    """Returns (regressions, report_lines). A metric regresses when it
+    drops more than ``threshold`` relative to the previous run."""
+    regressions, lines = [], []
+    for name in sorted(set(prev) & set(curr)):
+        p, c = prev[name], curr[name]
+        if p <= 0:
+            continue
+        delta = (c - p) / p
+        line = f"{name}: {p:.3f} -> {c:.3f} ({delta:+.1%})"
+        lines.append(line)
+        if delta < -threshold:
+            regressions.append(line)
+    for name in sorted(set(curr) - set(prev)):
+        lines.append(f"{name}: (new) {curr[name]:.3f}")
+    for name in sorted(set(prev) - set(curr)):
+        lines.append(f"{name}: {prev[name]:.3f} -> (gone)")
+    return regressions, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--prev", required=True,
+                    help="previous run's BENCH_ci.json")
+    ap.add_argument("--curr", required=True, help="this run's BENCH_ci.json")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="relative drop that counts as a regression")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on regression (default: warn only)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.prev) as f:
+            prev = extract(json.load(f))
+    except (OSError, json.JSONDecodeError) as e:
+        # first run on a branch / expired artifact — nothing to diff against
+        print(f"trendline: no usable previous artifact ({e}); skipping diff")
+        return 0
+    with open(args.curr) as f:
+        curr = extract(json.load(f))
+
+    regressions, lines = compare(prev, curr, args.threshold)
+    print("perf trendline (prev -> curr):")
+    for line in lines:
+        print(f"  {line}")
+    if not regressions:
+        print(f"no regressions beyond {args.threshold:.0%}")
+        return 0
+    for line in regressions:
+        print(f"::warning title=perf regression::{line}")
+    print(f"{len(regressions)} metric(s) regressed more than "
+          f"{args.threshold:.0%} vs the previous run "
+          f"({'failing' if args.strict else 'fail-soft: not failing'} "
+          "the job; CI bench runners are noisy — treat as a flag to "
+          "investigate, and compare BENCH_ci artifacts across a few runs)")
+    return 1 if args.strict else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

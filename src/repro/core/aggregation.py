@@ -114,7 +114,12 @@ def stacked_psum_parts(stacked_params: Pytree, umap: UnitMap,
     rows' contribution (U,). Both are *additive* across the mesh axis, so
     the caller can fold them — together with any other additive per-round
     stats (loss sums, comm bytes) — into one fused ``psum``, then call
-    :func:`stacked_psum_finalize` on the reduced values."""
+    :func:`stacked_psum_finalize` on the reduced values. On a 2-D
+    ('clients', 'model') mesh the caller may slice each numerator leaf down
+    to its 'model'-axis shard *before* the psum (the reduction runs over
+    'clients' only, per model column) — the unit-axis bookkeeping below
+    never touches the sharded leaf dims, so parts/finalize work unchanged
+    on 1/M slices."""
     w, denom_loc = unit_weights(selection, data_sizes)      # local (K,U),(U,)
     k = selection.shape[0]
 
@@ -140,7 +145,10 @@ def stacked_psum_finalize(partials: Pytree, denom: jnp.ndarray,
     """Replicated epilogue of the client-sharded Eq. 5: divide the psum'd
     numerators by the global denominator, fall back to the previous global
     model for dead units, and cast back to the parameter dtype.
-    ``stacked_params`` is only consulted for leaf dtypes."""
+    ``stacked_params`` is only consulted for leaf dtypes (its leaves need
+    not carry the stacked client axis — the sharded round passes its local
+    param shards, whose dtypes match, and whose leaves/fallback may be 1/M
+    'model'-axis slices aligned with the sliced numerators)."""
     safe = jnp.where(denom > 0, denom, 1.0)
 
     def finalize_one(key: str):

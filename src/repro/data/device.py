@@ -64,16 +64,18 @@ class ClientShards:
 
     # ------------------------------------------------------------------
     def place(self, mesh) -> "ClientShards":
-        """Replicate the dataset over a device mesh (client-sharded engine).
+        """Replicate the dataset over a device mesh (sharded engine).
 
         The global arrays are *replicated* (PartitionSpec()) rather than
         sharded: any device may need any sample, because the per-round
         participant set is a random subset of all N clients. With a local
         replica everywhere, the round-batch gather partitions cleanly over
         the 'clients' axis — each device reads only its own K/D clients'
-        rows and no cross-device traffic happens during data loading.
-        (Sharding the *sample* axis instead is the model/data-axis follow-on
-        tracked in ROADMAP.md.)
+        rows and no cross-device traffic happens during data loading. On a
+        2-D ('clients', 'model') mesh the dataset stays replicated along
+        'model' too (only params and the EF residual store are
+        model-sharded; sharding the *sample* axis is the follow-on tracked
+        in ROADMAP.md).
         """
         from jax.sharding import NamedSharding, PartitionSpec
         rep = NamedSharding(mesh, PartitionSpec())
@@ -85,7 +87,7 @@ class ClientShards:
 
     # ------------------------------------------------------------------
     def gather(self, clients: jnp.ndarray, batch: int,
-               key: jax.Array) -> dict:
+               key: jax.Array, mesh=None) -> dict:
         """Stacked (K, batch, ...) round batch, fully on device.
 
         Samples uniformly **with replacement** over each client's shard
@@ -94,10 +96,27 @@ class ClientShards:
         the two samplers differ in batch semantics, not just RNG stream).
         Determinism comes from ``key`` alone, so the host driver with
         ``sampler="jax"`` gathers bit-identical batches to the scan engine.
+
+        ``mesh``: when gathering inside a jitted multi-device program, pass
+        the engine's mesh so the random index draw runs replicated inside a
+        ``shard_map`` (:func:`repro.launch.mesh.replicated_rng`). Under the
+        default non-partitionable threefry, XLA is otherwise free to shard
+        the random op's lowering across devices, which silently changes
+        (and biases) the drawn values. The (pure, integer) gathers
+        downstream may be partitioned freely — partitioning cannot change
+        their values.
         """
         k = clients.shape[0]
         sizes = self.part_sizes[clients]                        # (K,)
-        j = jax.random.randint(key, (k, batch), 0, sizes[:, None])
+
+        def draw(key_, sizes_):
+            return jax.random.randint(key_, (k, batch), 0, sizes_[:, None])
+
+        if mesh is not None:
+            from repro.launch.mesh import replicated_rng
+            j = replicated_rng(draw, mesh)(key, sizes)
+        else:
+            j = draw(key, sizes)
         gidx = self.part_idx[clients[:, None], j]               # (K, batch)
         return {self.x_key: jnp.take(self.xs, gidx, axis=0),
                 self.y_key: jnp.take(self.ys, gidx, axis=0)}

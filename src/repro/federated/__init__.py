@@ -5,10 +5,11 @@ from repro.federated.sampling import (local_rows, round_keys, sample_clients,
 from repro.federated.server import (ALGOS, FLConfig, TrainLog,
                                     build_round_fn, build_round_scan,
                                     build_round_vmap, init_residual_store,
-                                    run_training, run_training_scan)
+                                    residual_store_specs, run_training,
+                                    run_training_scan)
 
 __all__ = ["make_local_update", "plain_sgd_client", "local_rows",
            "round_keys", "sample_clients", "sample_clients_jax", "ALGOS",
            "FLConfig", "TrainLog", "build_round_fn", "build_round_scan",
-           "build_round_vmap", "init_residual_store", "run_training",
-           "run_training_scan"]
+           "build_round_vmap", "init_residual_store",
+           "residual_store_specs", "run_training", "run_training_scan"]

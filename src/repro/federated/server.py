@@ -29,15 +29,23 @@ Two *multi-round* drivers share those round functions:
   seed (tested to fp32 tolerance; see benchmarks/round_engine_bench.py for
   the rounds/sec comparison).
 
-Both drivers scale past one accelerator via client-axis sharding: with
+Both drivers scale past one accelerator via mesh sharding: with
 ``FLConfig(mesh=make_client_mesh(...))`` the vmap round runs under
 ``shard_map`` over the mesh's 'clients' axis — each device trains K/D
 clients, FedLDF's divergence matrix is all-gathered for the global top-n
 selection, and the Eq. 5 aggregation / comm totals are psum-reduced, so the
-new global model comes back replicated. ``mesh=None`` (default) is the
-original single-device path, byte-for-byte unchanged. Sharded and unsharded
-trajectories agree to fp32 tolerance on a fixed seed (the reduction order
-differs; tests/test_shard_engine.py pins this down for mesh sizes 1/2/4).
+new global model comes back replicated. A 2-D
+``make_client_mesh(D, model=M)`` mesh additionally FSDP-shards the memory
+that used to be replicated per device: every parameter leaf and every row
+of the error-feedback residual store (the first memory cliff, at N × model
+size) lives as a 1/M 'model'-axis shard
+(:func:`repro.launch.sharding.fl_param_specs`); the round transiently
+all-gathers the full model for local training and slices the aggregation
+back to shards before the clients-axis psum. ``mesh=None`` (default) is the
+original single-device path, byte-for-byte unchanged, and 1-D client meshes
+are unchanged too. Sharded and unsharded trajectories agree to fp32
+tolerance on a fixed seed (the reduction order differs;
+tests/test_shard_engine.py and tests/test_model_axis.py pin this down).
 
 Algorithms: fedldf (paper), fedavg (Eq. 1), random (per-layer random-n),
 hdfl (client dropout [7]), fedadp (neuron pruning [6], vmap mode only).
@@ -63,8 +71,11 @@ from repro.data.device import ClientShards
 from repro.federated.client import make_local_update
 from repro.federated.sampling import (local_rows, round_keys, sample_clients,
                                       sample_clients_jax)
-from repro.launch.mesh import (CLIENT_AXIS, client_mesh_size,
+from repro.launch.mesh import (CLIENT_AXIS, MODEL_AXIS, client_mesh_size,
+                               model_mesh_size, replicated_rng,
                                shard_map_norep)
+from repro.launch.sharding import (fl_param_specs, to_named,
+                                   tree_all_gather, tree_shard_slice)
 from repro.optim import sgd
 from repro.optim.opt import Optimizer
 
@@ -91,7 +102,9 @@ class FLConfig:
     quantize_bits: int = 0
     error_feedback: bool = False
     # multi-device: shard the stacked client axis over this mesh's 'clients'
-    # axis (make_client_mesh). None = single-device round, unchanged.
+    # axis; a 2-D ('clients', 'model') mesh (make_client_mesh(model=M))
+    # additionally FSDP-shards param leaves + the EF residual store 1/M per
+    # device. None = single-device round, unchanged.
     mesh: Optional[Mesh] = None
 
     def __post_init__(self):
@@ -129,7 +142,7 @@ def _select(algo: str, divs: Optional[jnp.ndarray], key, k: int, u: int,
 # Round builders
 # ======================================================================
 def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig):
-    """Client-sharded round: ``shard_map`` over the mesh's 'clients' axis.
+    """Mesh-sharded round: ``shard_map`` over ('clients'[, 'model']) axes.
 
     Every device trains its K/D local clients (vmap over the local stack),
     then the round is stitched back together with collectives:
@@ -148,21 +161,42 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig):
       parameter leaf. (:func:`~repro.core.aggregation.aggregate_stacked`
       with ``axis_name`` / ``round_comm(axis_name=...)`` offer the same
       reductions as standalone calls.)
-    - Error-feedback residuals stay device-local (out_spec P('clients'));
-      the driver's store scatter handles the replicated-store update.
+    - Error-feedback residuals stay device-local (out_spec P('clients')
+      rows); the driver's store scatter handles the store update.
 
-    Outputs are replicated by construction (psum/all_gather/replicated
-    inputs); replication *checking* is disabled — see
-    :func:`repro.launch.mesh.shard_map_norep` — and covered by the
-    equivalence tests instead (tests/test_shard_engine.py).
+    On a 2-D ('clients', 'model') mesh the round is additionally
+    FSDP-sharded: parameter leaves (and EF residual rows) enter and leave
+    the body as 1/M 'model'-axis shards per :func:`fl_param_specs`. The
+    full model is reassembled *transiently* for local training
+    (``tree_all_gather``), and the Eq. 5 numerators are sliced back to this
+    device's shard (``tree_shard_slice``) **before** the fused psum — which
+    reduces over 'clients' only, so each model column reduces its own 1/M
+    slice and the at-rest params/store replication cliff disappears along
+    with 1/M of the collective payload. Gather/slice are exact data
+    movement, so a 2-D trajectory matches the 1-D mesh bit-for-bit and the
+    unsharded path to the usual fp32 psum-order tolerance.
+
+    Outputs are replicated (per model column) by construction
+    (psum/all_gather/replicated inputs); replication *checking* is
+    disabled — see :func:`repro.launch.mesh.shard_map_norep` — and covered
+    by the equivalence tests instead (tests/test_shard_engine.py,
+    tests/test_model_axis.py).
     """
     mesh, ax = flcfg.mesh, CLIENT_AXIS
     d = client_mesh_size(mesh)
+    m = model_mesh_size(mesh)
     k = flcfg.clients_per_round
     kloc = k // d
 
-    def body(params, batch, data_sizes, key, residuals):
-        # everything in here sees the LOCAL shard: kloc clients per device
+    def body(pspecs, params, batch, data_sizes, key, residuals):
+        # everything in here sees the LOCAL shard: kloc clients per device,
+        # and (2-D mesh) 1/M 'model'-axis blocks of each param/residual leaf
+        params_shard = params
+        if m > 1:
+            params = tree_all_gather(params, pspecs, MODEL_AXIS)
+            if residuals is not None:
+                residuals = tree_all_gather(residuals, pspecs, MODEL_AXIS,
+                                            offset=1)
         locals_, losses = jax.vmap(local_update, in_axes=(None, 0))(
             params, batch)
 
@@ -196,6 +230,9 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig):
                     keep_where_selected,
                     in_axes=(0, 0 if residuals is not None else None, 0),
                 )(cand_res, residuals, sel_loc)
+                if m > 1:   # back to this device's 1/M store-row shard
+                    new_residuals = tree_shard_slice(
+                        new_residuals, pspecs, m, MODEL_AXIS, offset=1)
                 metrics_extra["residuals"] = new_residuals
         else:
             locals_agg = locals_
@@ -204,9 +241,14 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig):
         # denominator, the loss sum, and the (additive) comm-byte totals
         # all ride the same psum — a single rendezvous instead of one per
         # parameter leaf, which is what keeps the sharded round scaling on
-        # oversubscribed CPU meshes as well as accelerator fabrics.
+        # oversubscribed CPU meshes as well as accelerator fabrics. The
+        # psum reduces over 'clients' ONLY: on a 2-D mesh each model
+        # column reduces its own 1/M numerator slice, leaving the 'model'
+        # shards intact.
         parts, denom_loc = agg.stacked_psum_parts(locals_agg, umap, sel_loc,
                                                   data_sizes)
+        if m > 1:
+            parts = tree_shard_slice(parts, pspecs, m, MODEL_AXIS)
         comm_loc = comm_mod.round_comm(
             sel_loc, umap,
             divergence_feedback=(flcfg.algo == "fedldf"),
@@ -217,30 +259,34 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig):
         (parts, denom), loss_sum, comm = jax.lax.psum(
             ((parts, denom_loc), losses.sum(), comm_add), ax)
         new_params = agg.stacked_psum_finalize(parts, denom, umap,
-                                               locals_agg, params)
+                                               params_shard, params_shard)
         comm["savings_frac"] = 1.0 - comm["uplink_total"] / \
             comm["fedavg_uplink"]
         loss = loss_sum / k
         return new_params, {"loss": loss, "comm": comm,
                             "selection": selection, **metrics_extra}
 
+    ef = bool(flcfg.quantize_bits and flcfg.error_feedback)
     out_metrics_spec = {"loss": P(), "comm": P(), "selection": P()}
-    if flcfg.quantize_bits and flcfg.error_feedback:
-        sharded = shard_map_norep(
-            body, mesh,
-            in_specs=(P(), P(ax), P(ax), P(), P(ax)),
-            out_specs=(P(), {**out_metrics_spec, "residuals": P(ax)}))
 
-        def round_fn(params, batch, data_sizes, key, residuals):
+    def round_fn(params, batch, data_sizes, key, residuals=None):
+        # specs are pure shape logic, computed at trace time (the drivers
+        # jit round_fn, so this runs once per compiled configuration)
+        pspecs = fl_param_specs(params, mesh)
+        row_specs = jax.tree.map(lambda s: P(ax, *s), pspecs,
+                                 is_leaf=lambda x: isinstance(x, P))
+        if ef:
+            sharded = shard_map_norep(
+                functools.partial(body, pspecs), mesh,
+                in_specs=(pspecs, P(ax), P(ax), P(), row_specs),
+                out_specs=(pspecs,
+                           {**out_metrics_spec, "residuals": row_specs}))
             return sharded(params, batch, data_sizes, key, residuals)
-    else:
         sharded = shard_map_norep(
-            lambda p, b, s, key: body(p, b, s, key, None), mesh,
-            in_specs=(P(), P(ax), P(ax), P()),
-            out_specs=(P(), out_metrics_spec))
-
-        def round_fn(params, batch, data_sizes, key, residuals=None):
-            return sharded(params, batch, data_sizes, key)
+            lambda p, b, s, key_: body(pspecs, p, b, s, key_, None), mesh,
+            in_specs=(pspecs, P(ax), P(ax), P()),
+            out_specs=(pspecs, out_metrics_spec))
+        return sharded(params, batch, data_sizes, key)
 
     return round_fn
 
@@ -272,9 +318,14 @@ def build_round_vmap(loss_fn, umap: UnitMap, flcfg: FLConfig,
             selection = sel.full_participation(k, umap.num_units)
             comm = comm_mod.round_comm(selection, umap,
                                        divergence_feedback=False)
-            # overwrite with FedADP's own accounting
+            # overwrite with FedADP's own accounting. The payload must be
+            # recomputed alongside the total, or the metrics dict goes
+            # internally inconsistent (payload + feedback != total — the
+            # pre-fix state left uplink_payload at full participation).
             comm["uplink_total"] = jnp.float32(0.0) + comm["fedavg_uplink"] \
                 * flcfg.fedadp_keep
+            comm["uplink_payload"] = comm["uplink_total"] \
+                - comm["uplink_feedback"]
             comm["savings_frac"] = 1.0 - flcfg.fedadp_keep
             return new_params, {"loss": losses.mean(), "comm": comm,
                                 "selection": selection}
@@ -437,13 +488,40 @@ class TrainLog:
         default_factory=comm_mod.CommMeter)
 
 
-def init_residual_store(params: Pytree, num_clients: int) -> Pytree:
+def init_residual_store(params: Pytree, num_clients: int,
+                        mesh=None) -> Pytree:
     """Per-client error-feedback residual store: every leaf gets a leading
-    ``(N,)`` client axis (float32, zero-initialised). Rows for the round's
+    ``(N,)`` client axis, zero-initialised **in the leaf's own dtype** (a
+    hard-coded float32 store silently upcast EF arithmetic — and doubled
+    the store's memory — for bf16/fp16 models). Rows for the round's
     participants are gathered before the round and scattered back after —
-    residuals belong to *clients*, not to sampling slots."""
-    return jax.tree.map(
-        lambda l: jnp.zeros((num_clients,) + l.shape, jnp.float32), params)
+    residuals belong to *clients*, not to sampling slots. At N × model
+    size this store is the first memory cliff; under a 2-D
+    ('clients', 'model') mesh pass ``mesh`` so it is held 'model'-axis
+    sharded (:func:`residual_store_specs`), 1/M per device — and *created*
+    sharded: the zeros are jitted with sharded out_shardings, so the full
+    replicated store never materialises on any single device (allocating
+    it first and resharding after would reintroduce, at init time, exactly
+    the cliff the sharding removes)."""
+    def build():
+        return jax.tree.map(
+            lambda l: jnp.zeros((num_clients,) + l.shape, l.dtype), params)
+
+    if mesh is None:
+        return build()
+    shardings = to_named(residual_store_specs(params, mesh), mesh)
+    return jax.jit(build, out_shardings=shardings)()
+
+
+def residual_store_specs(params: Pytree, mesh) -> Pytree:
+    """PartitionSpecs for the ``(N, ...)`` residual store: the client-id
+    axis is replicated (any client can be sampled onto any device), while
+    each leaf's trailing dims carry the same 'model'-axis sharding as the
+    corresponding parameter leaf (:func:`fl_param_specs`). All-replicated
+    on meshes without a 'model' axis."""
+    pspecs = fl_param_specs(params, mesh)
+    return jax.tree.map(lambda s: P(None, *s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
 
 
 def _gather_rows(store: Pytree, clients: jnp.ndarray) -> Pytree:
@@ -452,7 +530,12 @@ def _gather_rows(store: Pytree, clients: jnp.ndarray) -> Pytree:
 
 def _scatter_rows(store: Pytree, clients: jnp.ndarray,
                   rows: Pytree) -> Pytree:
-    return jax.tree.map(lambda full, r: full.at[clients].set(r), store, rows)
+    # explicit cast: EF update arithmetic runs fp32, the store keeps each
+    # leaf's own dtype (an implicit fp32->bf16 scatter cast is a
+    # FutureWarning on jax 0.4.x and an error on newer releases)
+    return jax.tree.map(
+        lambda full, r: full.at[clients].set(r.astype(full.dtype)),
+        store, rows)
 
 
 def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
@@ -481,10 +564,12 @@ def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
                        lambda: jax.jit(build_round_fn(loss_fn, umap, flcfg)))
     log = TrainLog()
     if flcfg.mesh is not None:
-        # replicate the global model (and EF store) over the client mesh so
-        # the sharded round starts from device-local copies everywhere
-        params = jax.device_put(params, NamedSharding(flcfg.mesh, P()))
-    residuals = (init_residual_store(params, flcfg.num_clients)
+        # place the global model over the mesh: replicated across 'clients'
+        # so the sharded round starts from device-local copies everywhere,
+        # and (2-D mesh) FSDP-sharded 1/M per device along the 'model' axis
+        params = jax.device_put(
+            params, to_named(fl_param_specs(params, flcfg.mesh), flcfg.mesh))
+    residuals = (init_residual_store(params, flcfg.num_clients, flcfg.mesh)
                  if flcfg.error_feedback else None)
     if sampler == "jax":
         shards = (fldata if isinstance(fldata, ClientShards)
@@ -496,6 +581,11 @@ def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
     else:
         rng = np.random.default_rng(seed)
         all_sizes = fldata.data_sizes()
+        # per-round algorithm keys: fold the round index into one base key.
+        # (The old ``PRNGKey(seed * 100003 + t)`` schedule degenerated to
+        # ``key = t`` at seed=0 and let nearby seeds replay each other's
+        # round keys once t crossed the stride.)
+        host_base = jax.random.PRNGKey(seed)
 
     for t in range(rounds):
         if sampler == "jax":
@@ -510,7 +600,7 @@ def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
             batch = fldata.round_batch(clients, flcfg.batch_per_client, rng)
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
             sizes = jnp.asarray(all_sizes[clients])
-            key = jax.random.PRNGKey(seed * 100003 + t)
+            key = jax.random.fold_in(host_base, t)
             clients = jnp.asarray(clients)
         if residuals is not None:
             res_rows = _gather_rows(residuals, clients)
@@ -557,30 +647,53 @@ def _build_block_fn(loss_fn, umap: UnitMap, flcfg: FLConfig):
     """
     round_fn = build_round_fn(loss_fn, umap, flcfg)
     ef = flcfg.error_feedback
-    # client-sharded engine: pin the gathered round batch (and EF rows) to
-    # the 'clients' axis so XLA partitions the gather itself — each device
+    mesh = flcfg.mesh
+    # sharded engine: pin the gathered round batch (and EF rows) to the
+    # 'clients' axis so XLA partitions the gather itself — each device
     # materialises only its own K/D clients' samples, never the full batch.
-    client_spec = (NamedSharding(flcfg.mesh, P(CLIENT_AXIS))
-                   if flcfg.mesh is not None else None)
+    # EF rows additionally keep their leaves' 'model'-axis sharding, and
+    # the scattered store is pinned back to its (replicated-N, 'model')
+    # layout so the scan carry's sharding stays fixed across rounds.
+    client_spec = (NamedSharding(mesh, P(CLIENT_AXIS))
+                   if mesh is not None else None)
 
     def one_round(carry, t, shards, all_sizes, base_key):
         params, residuals, acc = carry
         ck, bk, ak = round_keys(base_key, t)
-        clients = sample_clients_jax(ck, flcfg.num_clients,
-                                     flcfg.clients_per_round)
-        batch = shards.gather(clients, flcfg.batch_per_client, bk)
+        if mesh is not None:
+            # run the RNG draws replicated inside shard_map: the
+            # non-partitionable threefry lowering changes values when XLA
+            # shards it (see ClientShards.gather / replicated_rng) — the
+            # participant draw gets the same treatment as the batch draw.
+            clients = replicated_rng(
+                lambda k_: sample_clients_jax(k_, flcfg.num_clients,
+                                              flcfg.clients_per_round),
+                mesh)(ck)
+        else:
+            clients = sample_clients_jax(ck, flcfg.num_clients,
+                                         flcfg.clients_per_round)
+        batch = shards.gather(clients, flcfg.batch_per_client, bk, mesh=mesh)
         sizes = all_sizes[clients]
         if client_spec is not None:
             batch = jax.lax.with_sharding_constraint(batch, client_spec)
             sizes = jax.lax.with_sharding_constraint(sizes, client_spec)
         if ef:
             res_rows = _gather_rows(residuals, clients)
-            if client_spec is not None:
+            if mesh is not None:
+                pspecs = fl_param_specs(params, mesh)
+                is_p = lambda x: isinstance(x, P)
                 res_rows = jax.lax.with_sharding_constraint(
-                    res_rows, client_spec)
+                    res_rows, jax.tree.map(
+                        lambda s: NamedSharding(mesh, P(CLIENT_AXIS, *s)),
+                        pspecs, is_leaf=is_p))
             params, metrics = round_fn(params, batch, sizes, ak, res_rows)
             residuals = _scatter_rows(residuals, clients,
                                       metrics.pop("residuals"))
+            if mesh is not None:
+                residuals = jax.lax.with_sharding_constraint(
+                    residuals, jax.tree.map(
+                        lambda s: NamedSharding(mesh, P(None, *s)),
+                        pspecs, is_leaf=is_p))
         else:
             params, metrics = round_fn(params, batch, sizes, ak)
         acc = comm_mod.comm_acc_update(acc, metrics["comm"])
@@ -628,13 +741,15 @@ def run_training_scan(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
     run_block = _cached("block", loss_fn, umap, flcfg,
                         lambda: _build_block_fn(loss_fn, umap, flcfg))
     if flcfg.mesh is not None:
-        params = jax.device_put(params, NamedSharding(flcfg.mesh, P()))
+        # replicated over 'clients', FSDP-sharded over 'model' (2-D mesh)
+        params = jax.device_put(
+            params, to_named(fl_param_specs(params, flcfg.mesh), flcfg.mesh))
         shards = shards.place(flcfg.mesh)
     if jax.default_backend() in ("tpu", "gpu"):
         # run_block donates its carry; copy once so the caller's param
         # buffers survive the first block (residuals/acc are fresh).
         params = jax.tree.map(jnp.copy, params)
-    residuals0 = (init_residual_store(params, flcfg.num_clients)
+    residuals0 = (init_residual_store(params, flcfg.num_clients, flcfg.mesh)
                   if ef else None)
     carry = (params, residuals0, comm_mod.comm_acc_init())
     all_sizes = shards.data_sizes()

@@ -7,11 +7,21 @@ Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
 Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the 'pod' axis joins the
 data/FSDP product so cross-pod traffic is gradient/param-aggregation only.
 
-FL round engine: :func:`make_client_mesh` builds the 1-D ``'clients'`` mesh
-the federated drivers shard the stacked client axis over
-(``FLConfig(mesh=...)``; see federated/server.py). On CPU hosts, forced
-virtual devices (``XLA_FLAGS=--xla_force_host_platform_device_count=8``)
-make the same code path testable without accelerators.
+FL round engine: :func:`make_client_mesh` builds the mesh the federated
+drivers shard over (``FLConfig(mesh=...)``; see federated/server.py):
+
+- ``make_client_mesh(D)`` — 1-D ``'clients'`` mesh: the stacked client axis
+  of every round is split D ways (data parallelism over clients).
+- ``make_client_mesh(D, model=M)`` — 2-D ``('clients', 'model')`` mesh of
+  D total devices (D/M × M): in addition to the client split, every
+  parameter leaf and every row of the error-feedback residual store is
+  FSDP-sharded 1/M per device along its largest divisible dim
+  (:func:`repro.launch.sharding.fl_param_specs`), so the at-rest memory
+  cliffs — the N × model-size residual store first — shrink by M.
+
+On CPU hosts, forced virtual devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``) make the same code
+path testable without accelerators.
 """
 from __future__ import annotations
 
@@ -19,6 +29,7 @@ import jax
 import numpy as np
 
 CLIENT_AXIS = "clients"
+MODEL_AXIS = "model"
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -38,13 +49,19 @@ def make_host_mesh(data: int = 2, model: int = 2):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
-def make_client_mesh(num_devices: int | None = None):
-    """1-D ``'clients'`` mesh for sharding the FL round engine's stacked
-    client axis (the embarrassingly parallel dimension of every round).
+def make_client_mesh(num_devices: int | None = None, model: int = 1):
+    """Device mesh for the FL round engine.
 
-    ``num_devices=None`` uses every visible device; an explicit count takes
-    the first ``num_devices`` (so equivalence tests can build 1/2/4-device
-    submeshes inside one forced-8-device process).
+    ``num_devices`` counts the TOTAL devices used (``None`` = every visible
+    device; an explicit count takes the first ``num_devices``, so
+    equivalence tests can build submeshes inside one forced-8-device
+    process). With ``model=1`` (default) the mesh is the original 1-D
+    ``'clients'`` mesh — the stacked client axis is the embarrassingly
+    parallel dimension of every round. With ``model=M > 1`` the devices are
+    folded into a 2-D ``('clients', 'model')`` mesh of shape
+    ``(num_devices // M, M)``: the 'clients' factor still splits the round's
+    client stack, while the 'model' factor FSDP-shards parameter leaves and
+    the error-feedback residual store (see federated/server.py).
     """
     devs = jax.devices()
     n = len(devs) if num_devices is None else num_devices
@@ -53,7 +70,14 @@ def make_client_mesh(num_devices: int | None = None):
             f"make_client_mesh: asked for {n} devices, have {len(devs)} "
             "(on CPU, force more with "
             "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
-    return jax.sharding.Mesh(np.asarray(devs[:n]), (CLIENT_AXIS,))
+    if model <= 1:
+        return jax.sharding.Mesh(np.asarray(devs[:n]), (CLIENT_AXIS,))
+    if n % model:
+        raise ValueError(
+            f"make_client_mesh: model={model} must divide the total device "
+            f"count {n} (mesh shape is (clients={n}//{model}, model={model}))")
+    grid = np.asarray(devs[:n]).reshape(n // model, model)
+    return jax.sharding.Mesh(grid, (CLIENT_AXIS, MODEL_AXIS))
 
 
 def client_mesh_size(mesh) -> int:
@@ -63,6 +87,35 @@ def client_mesh_size(mesh) -> int:
             f"mesh has axes {mesh.axis_names}; FL client sharding needs a "
             f"{CLIENT_AXIS!r} axis (see make_client_mesh)")
     return int(mesh.shape[CLIENT_AXIS])
+
+
+def model_mesh_size(mesh) -> int:
+    """Devices on the ``'model'`` axis; 1 when the mesh has no such axis
+    (1-D client meshes keep params fully replicated)."""
+    if MODEL_AXIS not in mesh.axis_names:
+        return 1
+    return int(mesh.shape[MODEL_AXIS])
+
+
+def replicated_rng(fn, mesh):
+    """Wrap an RNG-consuming computation so its drawn values are
+    bit-identical to the single-device lowering on any ``mesh``.
+
+    Under the default non-partitionable threefry
+    (``jax_threefry_partitionable=False``), XLA's SPMD partitioner is free
+    to shard a random op's lowering across devices — which silently
+    *changes* (and can bias) the drawn values, because the counter
+    assignment is rewritten per shard; an output
+    ``with_sharding_constraint`` does not stop it from computing the bits
+    sharded first. Running the draw inside a ``shard_map`` whose in/out
+    specs are fully replicated leaves the partitioner nothing to split:
+    every device executes the exact single-device program. Inputs and
+    outputs must be small and wanted replicated (participant ids, batch
+    indices — the FL engine's case).
+    """
+    from jax.sharding import PartitionSpec
+    return shard_map_norep(fn, mesh, in_specs=PartitionSpec(),
+                           out_specs=PartitionSpec())
 
 
 def shard_map_norep(f, mesh, in_specs, out_specs):

@@ -39,10 +39,15 @@ def _axis_size(mesh: Mesh, axis) -> int:
 
 def auto_spec(shape: tuple[int, ...], mesh: Mesh, *,
               skip_leading: bool = False,
-              model_axis: str = "model") -> P:
-    """Generic two-level sharding of one array shape."""
-    daxes = data_axes(mesh)
-    daxis = daxes if len(daxes) > 1 else daxes[0]
+              model_axis: str = "model",
+              model_only: bool = False) -> P:
+    """Generic two-level sharding of one array shape.
+
+    ``model_only=True`` assigns the 'model' (tensor/FSDP) axis only and
+    leaves every other dim replicated — the FL round engine uses this so a
+    ('clients', 'model') mesh never shards parameter leaves over 'clients'
+    (that axis carries stacked *clients*, not parameter blocks).
+    """
     start = 1 if skip_leading else 0
     dims = list(range(start, len(shape)))
     spec: list = [None] * len(shape)
@@ -58,9 +63,12 @@ def auto_spec(shape: tuple[int, ...], mesh: Mesh, *,
     dm = pick(model_axis, set())
     if dm is not None:
         spec[dm] = model_axis
-    dd = pick(daxis, {dm} if dm is not None else set())
-    if dd is not None:
-        spec[dd] = daxis
+    if not model_only:
+        daxes = data_axes(mesh)
+        daxis = daxes if len(daxes) > 1 else daxes[0]
+        dd = pick(daxis, {dm} if dm is not None else set())
+        if dd is not None:
+            spec[dd] = daxis
     return P(*spec)
 
 
@@ -76,11 +84,17 @@ def _iter_paths(tree: Pytree, prefix: str = ""):
 
 
 def param_specs(params_shape: Pytree, mesh: Mesh,
-                overrides: Optional[dict[str, P]] = None) -> Pytree:
+                overrides: Optional[dict[str, P]] = None,
+                model_only: bool = False,
+                stacked_keys: tuple[str, ...] = STACKED_TOPKEYS) -> Pytree:
     """PartitionSpec pytree for a parameter (or cache) shape tree.
 
     ``params_shape`` leaves: ShapeDtypeStruct or arrays.
     ``overrides``: {path-regex: PartitionSpec} applied first-match.
+    ``model_only``: see :func:`auto_spec` — 'model'-axis shards only.
+    ``stacked_keys``: top-level keys whose leading dim is a stacked depth
+    (never sharded); callers whose depth dim doubles as a *unit* axis (the
+    FL engine) must list every such key or the unit bookkeeping breaks.
     """
     overrides = overrides or {}
 
@@ -92,10 +106,11 @@ def param_specs(params_shape: Pytree, mesh: Mesh,
         if len(shape) <= 1:
             return P()
         top = path.split("/", 1)[0]
-        skip = top in STACKED_TOPKEYS
+        skip = top in stacked_keys
         if len(shape) - (1 if skip else 0) < 1:
             return P()
-        return auto_spec(shape, mesh, skip_leading=skip)
+        return auto_spec(shape, mesh, skip_leading=skip,
+                         model_only=model_only)
 
     flat = dict(_iter_paths(params_shape))
     specs = {path: assign(path, leaf) for path, leaf in flat.items()}
@@ -114,6 +129,82 @@ def param_specs(params_shape: Pytree, mesh: Mesh,
 def to_named(spec_tree: Pytree, mesh: Mesh) -> Pytree:
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ----------------------------------------------------------------------
+# FL round engine ('clients' × 'model' mesh) — FSDP-style param policy and
+# the shard_map-side reassembly/slicing that goes with it.
+# ----------------------------------------------------------------------
+def fl_param_specs(params_shape: Pytree, mesh: Mesh,
+                   model_axis: str = "model") -> Pytree:
+    """Model-axis-only PartitionSpecs for the federated round engine.
+
+    Every parameter leaf gets its largest divisible dim (skipping the
+    stacked depth dim for ``STACKED_TOPKEYS`` subtrees) assigned to the
+    mesh's 'model' axis and everything else replicated — FSDP-style 1/M
+    per-device shards with no 'clients'-axis factor (that axis carries
+    stacked clients, never parameter blocks). On a mesh without a 'model'
+    axis (or with ``model=1``) the whole tree is replicated (``P()``),
+    which keeps 1-D client meshes byte-identical to the pre-model-axis
+    engine. Indivisible leaves fall back to replication per ``auto_spec``.
+    """
+    names = getattr(mesh, "axis_names", ())
+    if model_axis not in names or int(mesh.shape[model_axis]) <= 1:
+        return jax.tree.map(lambda _: P(), params_shape)
+    # the FL engine's unit bookkeeping (core/units.DEFAULT_STACKED_KEYS)
+    # treats these leading depth dims as the *unit* axis — sharding one
+    # would break the per-unit aggregation epilogue on 1/M slices, so they
+    # must all be skip_leading here ('experts' is stacked for units but
+    # not in the dry-run policy's STACKED_TOPKEYS).
+    from repro.core.units import DEFAULT_STACKED_KEYS
+    return param_specs(params_shape, mesh, model_only=True,
+                       stacked_keys=tuple(set(STACKED_TOPKEYS)
+                                          | set(DEFAULT_STACKED_KEYS)))
+
+
+def _model_dim(spec: P, axis_name: str) -> Optional[int]:
+    for i, s in enumerate(spec):
+        if s == axis_name:
+            return i
+    return None
+
+
+def tree_all_gather(tree: Pytree, spec_tree: Pytree,
+                    axis_name: str = "model", offset: int = 0) -> Pytree:
+    """Reassemble full leaves from per-device 'model'-axis shards.
+
+    Only callable inside ``shard_map``. ``spec_tree`` is the
+    :func:`fl_param_specs` tree of the *unprefixed* leaves; ``offset``
+    shifts every spec dim right (e.g. ``offset=1`` for error-feedback rows
+    whose leaves carry a leading client axis the spec does not mention).
+    Leaves whose spec has no 'model' entry are already full — returned
+    untouched, so a replicated tree makes this a no-op.
+    """
+    def gather(x, spec):
+        d = _model_dim(spec, axis_name)
+        if d is None:
+            return x
+        return jax.lax.all_gather(x, axis_name, axis=d + offset, tiled=True)
+
+    return jax.tree.map(gather, tree, spec_tree)
+
+
+def tree_shard_slice(tree: Pytree, spec_tree: Pytree, axis_size: int,
+                     axis_name: str = "model", offset: int = 0) -> Pytree:
+    """Slice full leaves down to this device's 'model'-axis shard — the
+    inverse of :func:`tree_all_gather`, same calling convention. Exact
+    (pure data movement): gather-then-slice round-trips bit-identically.
+    """
+    def shard(x, spec):
+        d = _model_dim(spec, axis_name)
+        if d is None:
+            return x
+        dim = d + offset
+        size = x.shape[dim] // axis_size
+        start = jax.lax.axis_index(axis_name) * size
+        return jax.lax.dynamic_slice_in_dim(x, start, size, axis=dim)
+
+    return jax.tree.map(shard, tree, spec_tree)
 
 
 def batch_specs(batch_shape: Pytree, mesh: Mesh, *,

@@ -222,6 +222,22 @@ class TestComm:
         assert float(stats["uplink_feedback"]) < 0.01 * float(
             stats["uplink_payload"])
 
+    def test_payload_plus_feedback_is_total(self, vgg_umap):
+        """The accounting invariant every consumer of the metrics dict
+        relies on: uplink_payload + uplink_feedback == uplink_total."""
+        umap = vgg_umap
+        s = sel.topn_divergence(
+            jax.random.uniform(jax.random.PRNGKey(1), (20, umap.num_units)),
+            4)
+        for fb in (False, True):
+            stats = round_comm(s, umap, divergence_feedback=fb)
+            assert float(stats["uplink_payload"]) \
+                + float(stats["uplink_feedback"]) \
+                == pytest.approx(float(stats["uplink_total"]))
+            assert float(stats["savings_frac"]) == pytest.approx(
+                1.0 - float(stats["uplink_total"])
+                / float(stats["fedavg_uplink"]))
+
 
 # ----------------------------------------------------------------------
 class TestConvergenceBound:

@@ -70,6 +70,14 @@ def test_fedadp_runs_and_prunes(setup):
     p, m = jax.jit(build_round_fn(_loss, umap, fl))(params, batch, sizes, key)
     assert np.isfinite(float(m["loss"]))
     assert float(m["comm"]["savings_frac"]) == pytest.approx(0.75, abs=0.01)
+    # the metrics dict must stay internally consistent: FedADP overwrites
+    # the total, so the payload has to be recomputed with it (regression:
+    # uplink_payload used to stay at the full-participation value)
+    c = m["comm"]
+    assert float(c["uplink_payload"]) + float(c["uplink_feedback"]) == \
+        pytest.approx(float(c["uplink_total"]))
+    assert float(c["uplink_payload"]) == \
+        pytest.approx(0.25 * float(c["fedavg_uplink"]))
     fl_scan = FLConfig(algo="fedadp", clients_per_round=k, mode="scan")
     with pytest.raises(NotImplementedError):
         build_round_fn(_loss, umap, fl_scan)

@@ -1,0 +1,302 @@
+"""Model-axis (FSDP) sharding: 2-D ('clients', 'model') mesh equivalence.
+
+The tentpole property: a round engine run on a 2-D mesh — params and the
+error-feedback residual store held as 1/M 'model'-axis shards per device —
+must reproduce the single-device trajectory to the same fp32 tolerance the
+1-D client mesh is pinned to (the all_gather/slice round trip is pure data
+movement; only the clients-axis psum changes fp32 reduction order). On top
+of trajectory equality, the leaves must *actually* be sharded: per-device
+bytes shrink ~1/M for every divisible leaf.
+
+Needs forced host devices (``REPRO_TEST_DEVICES=8``); multi-device cases
+skip cleanly on a plain single-device run, and the pure spec-policy tests
+(:func:`fl_param_specs`) run anywhere.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.round_engine_bench import EQUIV_TOL
+from repro.data import FederatedData, iid_partition, make_image_dataset
+from repro.federated import (FLConfig, init_residual_store,
+                             residual_store_specs, run_training,
+                             run_training_scan)
+from repro.launch.mesh import (make_client_mesh, model_mesh_size,
+                               replicated_rng)
+from repro.launch.sharding import fl_param_specs
+
+N_CLIENTS, K = 8, 4
+ATOL = EQUIV_TOL
+
+# (clients, model) mesh factorisations; total devices = clients * model
+MESHES_2D = [
+    pytest.param(c, m, marks=pytest.mark.skipif(
+        len(jax.devices()) < c * m,
+        reason=f"needs {c * m} devices; set REPRO_TEST_DEVICES=8"))
+    for c, m in [(1, 2), (2, 2), (2, 4), (4, 2)]
+]
+
+
+def _mlp_params(key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 2)
+    return {
+        "l1": {"w": jax.random.normal(ks[0], (3072, 16)) * 0.02,
+               "b": jnp.zeros((16,))},
+        "head": {"w": jax.random.normal(ks[1], (16, 10)) * 0.1,
+                 "b": jnp.zeros((10,))},
+    }
+
+
+def _loss(params, batch):
+    x = batch["images"].reshape(batch["images"].shape[0], -1)
+    h = jax.nn.relu(x @ params["l1"]["w"] + params["l1"]["b"])
+    logits = h @ params["head"]["w"] + params["head"]["b"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, batch["labels"][:, None],
+                                axis=-1).mean()
+
+
+@pytest.fixture(scope="module")
+def task():
+    train, _ = make_image_dataset(num_train=320, num_test=16, seed=1)
+    parts = iid_partition(train.ys, N_CLIENTS, seed=0)
+    data = FederatedData(train.xs, train.ys, parts)
+    return _mlp_params(), data
+
+
+def _assert_trees_close(a, b, atol=ATOL):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol)
+
+
+def _cfg(mesh, algo="fedldf", **kw):
+    return FLConfig(algo=algo, num_clients=N_CLIENTS, clients_per_round=K,
+                    top_n=2, mode="vmap", batch_per_client=8, mesh=mesh,
+                    **kw)
+
+
+# ----------------------------------------------------------------------
+# Trajectory equivalence (acceptance criterion: fedldf + fedavg, with and
+# without EF, on a 2-D mesh vs the single-device path, fixed seeds).
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("algo", ["fedldf", "fedavg"])
+@pytest.mark.parametrize("clients,model", MESHES_2D)
+def test_2d_mesh_matches_unsharded(task, algo, clients, model):
+    params, data = task
+    p0, l0 = run_training_scan(params, _loss, data, _cfg(None, algo),
+                               rounds=4, seed=3)
+    mesh = make_client_mesh(clients * model, model=model)
+    p1, l1 = run_training_scan(params, _loss, data, _cfg(mesh, algo),
+                               rounds=4, seed=3)
+    _assert_trees_close(p0, p1)
+    np.testing.assert_allclose(l0.losses, l1.losses, atol=ATOL)
+    assert l0.meter.uplink_bytes == pytest.approx(l1.meter.uplink_bytes)
+    assert l0.meter.downlink_bytes == pytest.approx(l1.meter.downlink_bytes)
+
+
+@pytest.mark.parametrize("clients,model", MESHES_2D)
+def test_2d_mesh_error_feedback(task, clients, model):
+    """EF residual rows flow 'model'-sharded through gather/round/scatter
+    and must reproduce the unsharded EF trajectory — and EF must keep its
+    cross-round effect under model sharding."""
+    params, data = task
+
+    def efcfg(mesh, ef):
+        return _cfg(mesh, quantize_bits=4, error_feedback=ef)
+
+    mesh = make_client_mesh(clients * model, model=model)
+    p0, _ = run_training_scan(params, _loss, data, efcfg(None, True),
+                              rounds=3, seed=0)
+    p1, _ = run_training_scan(params, _loss, data, efcfg(mesh, True),
+                              rounds=3, seed=0)
+    _assert_trees_close(p0, p1)
+    p_off, _ = run_training_scan(params, _loss, data, efcfg(mesh, False),
+                                 rounds=3, seed=0)
+    diff = max(float(jnp.abs(a - b).max()) for a, b in
+               zip(jax.tree.leaves(p1), jax.tree.leaves(p_off)))
+    assert diff > 1e-6, "error feedback lost its effect under model sharding"
+
+
+@pytest.mark.parametrize("clients,model", MESHES_2D)
+def test_2d_mesh_quantized_no_ef(task, clients, model):
+    params, data = task
+    p0, l0 = run_training_scan(params, _loss, data,
+                               _cfg(None, quantize_bits=4), rounds=2, seed=0)
+    p1, l1 = run_training_scan(params, _loss, data,
+                               _cfg(make_client_mesh(clients * model,
+                                                     model=model),
+                                    quantize_bits=4), rounds=2, seed=0)
+    _assert_trees_close(p0, p1)
+    assert l0.meter.uplink_bytes == pytest.approx(l1.meter.uplink_bytes)
+
+
+@pytest.mark.parametrize("clients,model", MESHES_2D)
+def test_2d_host_driver_matches_engine(task, clients, model):
+    params, data = task
+    mesh = make_client_mesh(clients * model, model=model)
+    ph, lh = run_training(params, _loss, data, _cfg(mesh), rounds=3, seed=0,
+                          sampler="jax")
+    ps, ls = run_training_scan(params, _loss, data, _cfg(mesh), rounds=3,
+                               seed=0)
+    _assert_trees_close(ph, ps)
+    assert lh.meter.uplink_bytes == pytest.approx(ls.meter.uplink_bytes)
+
+
+# ----------------------------------------------------------------------
+# The memory claim: leaves are *actually* model-sharded — per-device bytes
+# shrink ~1/M for params and for the residual store.
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("clients,model", MESHES_2D)
+def test_param_leaves_carry_model_shards(task, clients, model):
+    params, data = task
+    mesh = make_client_mesh(clients * model, model=model)
+    p1, _ = run_training_scan(params, _loss, data, _cfg(mesh), rounds=2,
+                              seed=0)
+    # the engine's returned params keep the FSDP layout: the big (3072, 16)
+    # leaf is split 1/M along dim 0 on every device
+    w = p1["l1"]["w"]
+    shard = w.addressable_shards[0].data
+    assert shard.shape == (3072 // model, 16)
+    assert shard.nbytes == w.nbytes // model
+    hw = p1["head"]["w"]                       # 16 % M == 0 for M in {2,4}
+    assert hw.addressable_shards[0].data.shape == (16 // model, 10)
+    # 1-D leaves are replicated (auto_spec falls back)
+    b = p1["l1"]["b"]
+    assert b.addressable_shards[0].data.shape == b.shape
+
+
+@pytest.mark.parametrize("clients,model", MESHES_2D)
+def test_residual_store_carries_model_shards(task, clients, model):
+    """The EF store — the N × model-size memory cliff — must live 1/M
+    'model'-sharded per device, client-id axis replicated."""
+    params, _ = task
+    mesh = make_client_mesh(clients * model, model=model)
+    specs = residual_store_specs(params, mesh)
+    assert specs["l1"]["w"] == P(None, "model", None)
+    assert specs["l1"]["b"] == P(None)
+    # created sharded (mesh arg): the full N× store never materialises
+    # replicated on one device
+    store = init_residual_store(params, N_CLIENTS, mesh)
+    row = store["l1"]["w"]                     # (N, 3072, 16)
+    shard = row.addressable_shards[0].data
+    assert shard.shape == (N_CLIENTS, 3072 // model, 16)
+    assert shard.nbytes == row.nbytes // model
+    # store dtype mirrors the param leaf dtype (no silent fp32 upcast)
+    assert row.dtype == params["l1"]["w"].dtype
+
+
+# ----------------------------------------------------------------------
+# Pure spec policy + mesh builders (no forced devices needed).
+# ----------------------------------------------------------------------
+class FakeMesh:
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_fl_param_specs_model_only():
+    params = jax.tree.map(lambda s: jnp.zeros(s),
+                          {"l1": {"w": (3072, 16), "b": (16,)},
+                           "head": {"w": (16, 10), "b": (10,)}},
+                          is_leaf=lambda x: isinstance(x, tuple))
+    mesh = FakeMesh({"clients": 2, "model": 2})
+    specs = fl_param_specs(params, mesh)
+    # largest divisible dim -> 'model'; nothing ever lands on 'clients'
+    assert specs["l1"]["w"] == P("model", None)
+    assert specs["head"]["w"] == P("model", None)
+    assert specs["l1"]["b"] == P()
+    assert "clients" not in [s for spec in jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)) for s in spec]
+    # 1-D client mesh (or model=1): everything replicated — the
+    # byte-identical pre-model-axis layout
+    for fake in (FakeMesh({"clients": 4}), FakeMesh({"clients": 4,
+                                                     "model": 1})):
+        assert all(s == P() for s in jax.tree.leaves(
+            fl_param_specs(params, fake),
+            is_leaf=lambda x: isinstance(x, P)))
+    # indivisible leaf falls back to replication (all-None spec)
+    odd = {"x": jnp.zeros((7, 9))}
+    assert jax.tree.leaves(fl_param_specs(odd, mesh),
+                           is_leaf=lambda x: isinstance(x, P))[0] \
+        == P(None, None)
+
+
+def test_fl_param_specs_never_shards_unit_axes():
+    """Every stacked key the UnitMap treats as a unit axis — including
+    'experts', which the dry-run policy's STACKED_TOPKEYS does not list —
+    must keep its leading depth dim unsharded, or the per-unit aggregation
+    epilogue breaks on 1/M slices."""
+    mesh = FakeMesh({"clients": 2, "model": 2})
+    params = {"blocks": {"w": jnp.zeros((2, 16, 16))},
+              "experts": {"w": jnp.zeros((8, 6, 6))}}
+    specs = fl_param_specs(params, mesh)
+    assert specs["blocks"]["w"][0] is None
+    # without the stacked_keys alignment this was P('model', None, None)
+    assert specs["experts"]["w"] == P(None, None, "model")
+
+
+@pytest.mark.skipif(len(jax.devices()) < 4, reason="needs 4 devices")
+def test_2d_mesh_stacked_units_model(task):
+    """Stacked-key params (n > 1 units per span) through the 2-D mesh: the
+    unit axis stays whole while trailing dims are model-sharded, and the
+    trajectory matches the single-device engine."""
+    _, data = task
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    params = {
+        "embed": {"w": jax.random.normal(ks[0], (3072, 16)) * 0.02},
+        "blocks": {"w": jax.random.normal(ks[1], (2, 16, 16)) * 0.1,
+                   "b": jnp.zeros((2, 16))},
+        "head": {"w": jax.random.normal(ks[2], (16, 10)) * 0.1},
+    }
+
+    def loss(p, batch):
+        x = batch["images"].reshape(batch["images"].shape[0], -1)
+        h = x @ p["embed"]["w"]
+        for i in range(2):
+            h = jax.nn.relu(h @ p["blocks"]["w"][i] + p["blocks"]["b"][i])
+        logits = h @ p["head"]["w"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, batch["labels"][:, None],
+                                    axis=-1).mean()
+
+    p0, _ = run_training_scan(params, loss, data, _cfg(None), rounds=3,
+                              seed=0)
+    mesh = make_client_mesh(4, model=2)
+    p1, _ = run_training_scan(params, loss, data, _cfg(mesh), rounds=3,
+                              seed=0)
+    _assert_trees_close(p0, p1)
+    bw = p1["blocks"]["w"]                 # unit axis whole, dim2 sharded
+    assert bw.addressable_shards[0].data.shape == (2, 16, 8)
+
+
+def test_make_client_mesh_model_factor():
+    if len(jax.devices()) >= 4:
+        mesh = make_client_mesh(4, model=2)
+        assert mesh.axis_names == ("clients", "model")
+        assert mesh.shape["clients"] == 2 and mesh.shape["model"] == 2
+        assert model_mesh_size(mesh) == 2
+        with pytest.raises(AssertionError):   # K=5 not divisible by clients=2
+            FLConfig(num_clients=10, clients_per_round=5, top_n=2, mesh=mesh)
+    mesh1 = make_client_mesh(1)
+    assert mesh1.axis_names == ("clients",)
+    assert model_mesh_size(mesh1) == 1        # no 'model' axis -> 1
+    if len(jax.devices()) >= 3:
+        with pytest.raises(ValueError):       # model must divide the total
+            make_client_mesh(3, model=2)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 4, reason="needs 4 devices")
+def test_replicated_rng_matches_single_device():
+    """The engine's RNG guard: draws computed inside a replicated shard_map
+    must be bit-identical to the eager single-device draw on any mesh (the
+    non-partitionable threefry lowering silently changes values when XLA's
+    partitioner shards it — the scan-engine regression this pins down)."""
+    key = jax.random.PRNGKey(7)
+    want = np.asarray(jax.random.randint(key, (4, 8), 0, 37))
+    for model in (1, 2):
+        mesh = make_client_mesh(4, model=model)
+        got = jax.jit(replicated_rng(
+            lambda k_: jax.random.randint(k_, (4, 8), 0, 37), mesh))(key)
+        np.testing.assert_array_equal(want, np.asarray(got))

@@ -80,6 +80,47 @@ def test_scan_engine_eval_blocks_match_host(task):
 
 
 # ----------------------------------------------------------------------
+class TestHostKeySchedule:
+    """Regression for the host-sampler key schedule: the old
+    ``PRNGKey(seed * 100003 + t)`` degenerated to ``key = t`` at seed=0 and
+    let nearby seeds replay each other's per-round keys once the round
+    index crossed the stride (seed s, round t ≡ seed s+1, round t-100003).
+    The fix folds the round index into one per-seed base key."""
+
+    @staticmethod
+    def _key(seed, t):
+        return tuple(np.asarray(
+            jax.random.fold_in(jax.random.PRNGKey(seed), t)).tolist())
+
+    def test_streams_disjoint_across_seeds(self):
+        # include the adversarial pair that collided under the old scheme:
+        # (seed=0, t=100003) vs (seed=1, t=0)
+        rounds = [0, 1, 2, 100003, 100004]
+        streams = {s: {self._key(s, t) for t in rounds} for s in range(4)}
+        for s1 in streams:
+            for s2 in streams:
+                if s1 < s2:
+                    assert not (streams[s1] & streams[s2]), (s1, s2)
+
+    def test_seed_zero_not_degenerate(self):
+        # old schedule: seed=0, round t  ->  PRNGKey(t) exactly
+        for t in range(4):
+            assert self._key(0, t) != tuple(
+                np.asarray(jax.random.PRNGKey(t)).tolist())
+
+    def test_host_random_algo_differs_across_seeds(self, task):
+        """Driver-level: key-driven selection policies must see different
+        streams for different seeds from round 0 on."""
+        params, data = task
+        fl = FLConfig(algo="random", num_clients=N_CLIENTS,
+                      clients_per_round=K, top_n=2, mode="vmap",
+                      batch_per_client=8)
+        _, l0 = run_training(params, _loss, data, fl, rounds=2, seed=0)
+        _, l1 = run_training(params, _loss, data, fl, rounds=2, seed=1)
+        assert l0.losses != l1.losses
+
+
+# ----------------------------------------------------------------------
 class TestDeviceSampling:
     def test_sample_clients_jax_distinct_in_range(self):
         for s in range(5):
@@ -115,6 +156,70 @@ class TestDeviceSampling:
         # cyclic padding keeps every slot a valid member of the shard
         for i, p in enumerate(parts):
             assert set(np.asarray(shards.part_idx[i])) == set(p)
+
+    def test_gather_small_shard_respects_padding_contract(self):
+        """The cyclic-pad contract: a client whose shard is smaller than
+        ``batch_per_client`` must never sample an index beyond
+        ``part_sizes[c]`` — every gathered sample belongs to the owning
+        client's true partition, with a batch much larger than the shard,
+        and the whole (small) shard is reachable across keys."""
+        xs = np.arange(10, dtype=np.float32)[:, None]   # value == global idx
+        ys = np.arange(10)
+        parts = [np.arange(6), np.array([6, 7]), np.array([8, 9])]
+        shards = ClientShards.from_federated(FederatedData(xs, ys, parts))
+        batch = 16                                      # >> shard sizes 2
+        seen = {1: set(), 2: set()}
+        for s in range(10):
+            b = shards.gather(jnp.array([1, 2]), batch,
+                              jax.random.PRNGKey(s))
+            got = np.asarray(b["labels"])               # global sample ids
+            assert got.shape == (2, batch)
+            assert set(got[0]) <= {6, 7}, "client 1 sampled out of shard"
+            assert set(got[1]) <= {8, 9}, "client 2 sampled out of shard"
+            seen[1] |= set(got[0].tolist())
+            seen[2] |= set(got[1].tolist())
+        assert seen[1] == {6, 7} and seen[2] == {8, 9}
+
+
+# ----------------------------------------------------------------------
+class TestMixedDtypeErrorFeedback:
+    """Residual-store dtype: the store must mirror each leaf's own dtype
+    (a hard-coded float32 store silently upcast EF arithmetic — and
+    doubled the store's memory — for bf16/fp16 params)."""
+
+    @staticmethod
+    def _mixed_params():
+        p = _mlp_params()
+        p["head"] = jax.tree.map(lambda l: l.astype(jnp.bfloat16),
+                                 p["head"])
+        return p
+
+    def test_store_dtypes_mirror_leaves(self):
+        from repro.federated import init_residual_store
+        p = self._mixed_params()
+        store = init_residual_store(p, N_CLIENTS)
+        for leaf, row in zip(jax.tree.leaves(p), jax.tree.leaves(store)):
+            assert row.dtype == leaf.dtype
+            assert row.shape == (N_CLIENTS,) + leaf.shape
+
+    def test_mixed_dtype_ef_trains_and_drivers_agree(self, task):
+        _, data = task
+        p = self._mixed_params()
+        fl = FLConfig(algo="fedldf", num_clients=N_CLIENTS,
+                      clients_per_round=K, top_n=2, mode="vmap",
+                      batch_per_client=8, quantize_bits=4,
+                      error_feedback=True)
+        ph, lh = run_training(p, _loss, data, fl, rounds=3, seed=0,
+                              sampler="jax")
+        ps, ls = run_training_scan(p, _loss, data, fl, rounds=3, seed=0)
+        # dtypes preserved through rounds, trajectories agree, loss finite
+        for a, b in zip(jax.tree.leaves(ph), jax.tree.leaves(ps)):
+            assert a.dtype == b.dtype
+            np.testing.assert_allclose(
+                np.asarray(a, dtype=np.float32),
+                np.asarray(b, dtype=np.float32), atol=2e-5)
+        assert ph["head"]["w"].dtype == jnp.bfloat16
+        assert all(np.isfinite(lh.losses)) and all(np.isfinite(ls.losses))
 
 
 # ----------------------------------------------------------------------

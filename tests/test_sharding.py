@@ -39,6 +39,18 @@ def test_auto_spec_indivisible_falls_back():
     assert sh.auto_spec((7, 9), MESH) == P(None, None)
 
 
+def test_auto_spec_model_only():
+    """model_only: the FL round engine's policy — no data-axis factor, so
+    a ('clients', 'model') mesh never shards params over 'clients'."""
+    assert sh.auto_spec((5120, 13824), MESH, model_only=True) == \
+        P(None, "model")
+    fl_mesh = FakeMesh({"clients": 4, "model": 2})
+    assert sh.auto_spec((3072, 16), fl_mesh, model_only=True) == \
+        P("model", None)
+    assert sh.auto_spec((48, 5120, 13824), fl_mesh, skip_leading=True,
+                        model_only=True) == P(None, None, "model")
+
+
 def test_auto_spec_multipod_uses_pod_axis():
     spec = sh.auto_spec((5120, 8192), MESH_MP)
     assert spec == P(("pod", "data"), "model")

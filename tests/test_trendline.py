@@ -1,0 +1,83 @@
+"""CI perf-trendline logic (benchmarks/trendline.py): metric extraction
+from BENCH_ci.json dumps and the fail-soft regression comparison."""
+import json
+
+import pytest
+
+from benchmarks.trendline import compare, extract, main
+
+BENCH = {
+    "ci": True,
+    "engine": {"mode": "floor", "host_rate": 50.0, "scan_rate": 200.0,
+               "speedup": 4.0},
+    "shard": {"unsharded": 40.0, "speedup": 1.5,
+              "mesh": {"1": 35.0, "2": 45.0, "8": 60.0},
+              "model_mesh": {"model": 2, "rate": 30.0},
+              "equiv_ok": True},
+}
+
+
+def test_extract_flattens_tracked_metrics():
+    got = extract(BENCH)
+    assert got["engine.scan_rate"] == 200.0
+    assert got["shard.speedup"] == 1.5
+    assert got["shard.mesh.8"] == 60.0
+    assert got["shard.model_mesh.rate"] == 30.0
+    assert "ci" not in got
+
+
+def test_extract_tolerates_missing_sections():
+    assert extract({}) == {}
+    assert extract({"engine": {"scan_rate": 1.0}}) == {
+        "engine.scan_rate": 1.0}
+    # non-numeric junk is skipped, not crashed on
+    assert extract({"shard": {"speedup": "n/a", "mesh": {"2": None}}}) == {}
+
+
+def test_compare_flags_only_large_drops():
+    prev = extract(BENCH)
+    curr = dict(prev)
+    curr["engine.scan_rate"] = 150.0          # -25 %: regression
+    curr["shard.speedup"] = 1.35              # -10 %: within noise
+    regressions, lines = compare(prev, curr, threshold=0.2)
+    assert len(regressions) == 1
+    assert "engine.scan_rate" in regressions[0]
+    assert any("shard.speedup" in line for line in lines)
+
+
+def test_compare_improvements_and_disjoint_keys_ok():
+    regs, _ = compare({"a": 1.0}, {"a": 2.0})       # improvement
+    assert regs == []
+    regs, lines = compare({"a": 1.0}, {"b": 1.0})   # nothing in common
+    assert regs == []
+    assert any("(new)" in line for line in lines) and \
+        any("(gone)" in line for line in lines)
+
+
+def test_main_fail_soft_vs_strict(tmp_path, capsys):
+    prev, curr = tmp_path / "prev.json", tmp_path / "curr.json"
+    prev.write_text(json.dumps(BENCH))
+    bad = {"engine": {"scan_rate": 100.0}}          # -50 % vs 200
+    curr.write_text(json.dumps(bad))
+    assert main(["--prev", str(prev), "--curr", str(curr)]) == 0
+    assert "::warning" in capsys.readouterr().out
+    assert main(["--prev", str(prev), "--curr", str(curr),
+                 "--strict"]) == 1
+
+
+def test_main_missing_previous_artifact_skips(tmp_path, capsys):
+    curr = tmp_path / "curr.json"
+    curr.write_text(json.dumps(BENCH))
+    assert main(["--prev", str(tmp_path / "nope.json"),
+                 "--curr", str(curr)]) == 0
+    assert "skipping diff" in capsys.readouterr().out
+
+
+def test_no_regression_exit_zero(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps(BENCH))
+    assert main(["--prev", str(p), "--curr", str(p), "--strict"]) == 0
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])
