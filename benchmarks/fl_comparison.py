@@ -1,13 +1,18 @@
 """Paper Fig. 3 / Fig. 4 analogue: test error vs communication overhead.
 
-Runs FedLDF vs FedAvg / Random / HDFL / FedADP on the synthetic CIFAR-10-like
-task, IID and Dirichlet(α=1), and emits CSV:
+Runs **every registered strategy** (FedLDF vs FedAvg / Random / HDFL /
+FedADP / FedLP out of the box — ``register_strategy`` plugins are picked
+up automatically) on the synthetic CIFAR-10-like task, IID and
+Dirichlet(α=1), and emits CSV:
 
     fig,algo,round,uplink_mb,test_error
 
 Scale knobs default to a CI-friendly reduction of the paper's setup
 (N=20 clients, K=10/round, n=2 — same n/K=0.2 ratio as the paper's
 K=20/n=4); pass --paper-scale for the full §III-A configuration.
+Equal-communication setting: FedADP's keep fraction and FedLP's layer
+keep probability are both pinned to n/K, so the error-vs-bytes ordering
+compares like against like.
 """
 from __future__ import annotations
 
@@ -20,14 +25,12 @@ import jax.numpy as jnp
 
 from repro.data import (FederatedData, dirichlet_partition, iid_partition,
                         make_image_dataset)
-from repro.federated import FLConfig, run_training
+from repro.federated import FLConfig, registered_algos, run_training
 from repro.models import cnn
-
-ALGOS = ("fedldf", "fedavg", "random", "hdfl", "fedadp")
 
 
 def run(paper_scale: bool = False, rounds: int = 40, seed: int = 0,
-        out=sys.stdout):
+        out=sys.stdout, algos: tuple[str, ...] | None = None):
     if paper_scale:
         cfg = cnn.VGGConfig()
         n_clients, k, n = 50, 20, 4
@@ -47,6 +50,7 @@ def run(paper_scale: bool = False, rounds: int = 40, seed: int = 0,
                                 cfg)
     eval_fn = jax.jit(lambda p: 1.0 - cnn.accuracy(p, cfg, test_batch))
 
+    algos = tuple(algos) if algos is not None else registered_algos()
     results = {}
     print("fig,algo,round,uplink_mb,test_error", file=out)
     for fig, splitter in (("fig3_iid", iid_partition),
@@ -55,11 +59,11 @@ def run(paper_scale: bool = False, rounds: int = 40, seed: int = 0,
                                y, nc, alpha=1.0, seed=seed))):
         parts = splitter(train.ys, n_clients, seed)
         data = FederatedData(train.xs, train.ys, parts)
-        for algo in ALGOS:
+        for algo in algos:
             fl = FLConfig(algo=algo, num_clients=n_clients,
                           clients_per_round=k, top_n=n, lr=0.08,
                           mode="vmap", batch_per_client=batch,
-                          fedadp_keep=n / k)
+                          fedadp_keep=n / k, fedlp_p=n / k)
             params = cnn.init_params(jax.random.PRNGKey(seed), cfg)
             params, log = run_training(params, loss_fn, data, fl,
                                        rounds=rounds, eval_fn=eval_fn,
@@ -75,12 +79,19 @@ def summarize(results, out=sys.stdout):
     """Derived claims: savings ratio + error ordering (paper §III-B)."""
     print("# summary: algo, final_err, total_uplink_mb, savings_vs_fedavg",
           file=out)
+    algos = []
+    for (_, algo) in results:          # registry order, deduped
+        if algo not in algos:
+            algos.append(algo)
     for fig in ("fig3_iid", "fig4_noniid"):
-        base = results[(fig, "fedavg")].meter.uplink_bytes
-        for algo in ALGOS:
+        for algo in algos:
             log = results[(fig, algo)]
             err = log.test_errors[-1][1]
             up = log.meter.uplink_bytes
+            # every meter carries its own uncompressed-FedAvg reference
+            # bytes, so the savings column survives algo subsets that
+            # omit fedavg itself (for fedavg, up == base -> 0.000)
+            base = log.meter.fedavg_uplink_bytes
             print(f"# {fig},{algo},{err:.4f},{up/1e6:.1f},"
                   f"{1 - up / base:.3f}", file=out)
 

@@ -1,16 +1,24 @@
-"""Perf trendline: diff a BENCH_ci.json against the previous run's artifact.
+"""Perf trendline: diff a BENCH_ci.json against a windowed-median baseline.
 
-    python benchmarks/trendline.py --prev prev/BENCH_ci.json \
-        --curr BENCH_ci.json [--threshold 0.2] [--strict]
+    python benchmarks/trendline.py --prev p1/BENCH_ci.json \
+        [--prev p2/BENCH_ci.json ...] --curr BENCH_ci.json \
+        [--threshold 0.2] [--strict]
 
-CI (ci.yml `bench-trend` job) fetches the previous push's ``BENCH_ci``
-artifact and runs this after every bench-smoke, so rounds/sec and the
-``[shard]`` speedup get a regression gate instead of only a recorded
-trajectory (the ROADMAP "CI perf trendline" item). The gate is
-**fail-soft** by default: regressions beyond the threshold print GitHub
-``::warning::`` annotations and the exit code stays 0 — CI bench runners
-are noisy shared machines, so a hard gate would flake; ``--strict`` turns
-regressions into a non-zero exit for local use.
+CI (ci.yml `bench-trend` job) fetches up to the last 5 same-branch
+``BENCH_ci`` artifacts and runs this after every bench-smoke, so
+rounds/sec and the ``[shard]`` speedup get a regression gate instead of
+only a recorded trajectory. The baseline for each metric is the **median
+across the previous runs** that report it (``--prev`` is repeatable,
+window capped at :data:`WINDOW`): a single noisy runner in the history
+can neither mask a real regression (one inflated previous run no longer
+IS the baseline) nor fake one (one deflated run can't drag the baseline
+down). Unreadable/missing ``--prev`` files are skipped individually; with
+no usable history the diff is skipped cleanly.
+
+The gate is **fail-soft** by default: regressions beyond the threshold
+print GitHub ``::warning::`` annotations and the exit code stays 0 — CI
+bench runners are noisy shared machines, so a hard gate would flake;
+``--strict`` turns regressions into a non-zero exit for local use.
 
 Only stdlib — runnable without PYTHONPATH or jax.
 """
@@ -18,7 +26,13 @@ from __future__ import annotations
 
 import argparse
 import json
+import statistics
 import sys
+
+# windowed-median baseline: at most this many previous runs are consulted
+# (newest last — callers pass them oldest→newest; extras are dropped from
+# the OLD end)
+WINDOW = 5
 
 # metric path -> human label. Higher is better for every tracked metric
 # (rates and speedups), so a regression is curr < (1 - threshold) * prev.
@@ -49,10 +63,26 @@ def extract(results: dict) -> dict[str, float]:
     return out
 
 
+def median_baseline(runs: list[dict[str, float]]) -> dict[str, float]:
+    """Per-metric median over the last ``WINDOW`` runs that report it.
+
+    A metric only needs to appear in ONE previous run to be tracked —
+    ``statistics.median`` is taken over however many runs carry it, so a
+    freshly added benchmark section starts getting gated as soon as one
+    artifact records it."""
+    window = runs[-WINDOW:]
+    out: dict[str, float] = {}
+    for name in {k for run in window for k in run}:
+        vals = [run[name] for run in window if name in run]
+        out[name] = float(statistics.median(vals))
+    return out
+
+
 def compare(prev: dict[str, float], curr: dict[str, float],
             threshold: float = 0.2) -> tuple[list[str], list[str]]:
     """Returns (regressions, report_lines). A metric regresses when it
-    drops more than ``threshold`` relative to the previous run."""
+    drops more than ``threshold`` relative to the baseline (for the
+    windowed CI gate, ``prev`` is the :func:`median_baseline`)."""
     regressions, lines = [], []
     for name in sorted(set(prev) & set(curr)):
         p, c = prev[name], curr[name]
@@ -72,8 +102,10 @@ def compare(prev: dict[str, float], curr: dict[str, float],
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--prev", required=True,
-                    help="previous run's BENCH_ci.json")
+    ap.add_argument("--prev", required=True, action="append",
+                    help="a previous run's BENCH_ci.json (repeatable, "
+                         "oldest first; baseline = per-metric median of "
+                         f"the last {WINDOW}; unreadable files skipped)")
     ap.add_argument("--curr", required=True, help="this run's BENCH_ci.json")
     ap.add_argument("--threshold", type=float, default=0.2,
                     help="relative drop that counts as a regression")
@@ -81,18 +113,26 @@ def main(argv=None) -> int:
                     help="exit non-zero on regression (default: warn only)")
     args = ap.parse_args(argv)
 
-    try:
-        with open(args.prev) as f:
-            prev = extract(json.load(f))
-    except (OSError, json.JSONDecodeError) as e:
-        # first run on a branch / expired artifact — nothing to diff against
-        print(f"trendline: no usable previous artifact ({e}); skipping diff")
+    prev_runs: list[dict[str, float]] = []
+    for path in args.prev:
+        try:
+            with open(path) as f:
+                prev_runs.append(extract(json.load(f)))
+        except (OSError, json.JSONDecodeError) as e:
+            # expired artifact / partial download — skip this one only
+            print(f"trendline: skipping unreadable previous artifact "
+                  f"{path} ({e})")
+    if not prev_runs:
+        # first run on a branch — nothing to diff against
+        print("trendline: no usable previous artifact; skipping diff")
         return 0
+    baseline = median_baseline(prev_runs)
     with open(args.curr) as f:
         curr = extract(json.load(f))
 
-    regressions, lines = compare(prev, curr, args.threshold)
-    print("perf trendline (prev -> curr):")
+    regressions, lines = compare(baseline, curr, args.threshold)
+    print(f"perf trendline (median of last {len(prev_runs[-WINDOW:])} "
+          "run(s) -> curr):")
     for line in lines:
         print(f"  {line}")
     if not regressions:
@@ -101,7 +141,7 @@ def main(argv=None) -> int:
     for line in regressions:
         print(f"::warning title=perf regression::{line}")
     print(f"{len(regressions)} metric(s) regressed more than "
-          f"{args.threshold:.0%} vs the previous run "
+          f"{args.threshold:.0%} vs the windowed-median baseline "
           f"({'failing' if args.strict else 'fail-soft: not failing'} "
           "the job; CI bench runners are noisy — treat as a flag to "
           "investigate, and compare BENCH_ci artifacts across a few runs)")

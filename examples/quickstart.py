@@ -1,6 +1,6 @@
 """Quickstart: one FedLDF round step by step, then a scanned training run.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--rounds N]
 
 Walks the paper's Algorithm 1 with the public API: local training (Eq. 2),
 per-layer divergence (Eq. 3), top-n selection (Eq. 4), layer-wise
@@ -8,6 +8,8 @@ aggregation (Eq. 5/6), and the communication ledger — then hands the same
 model to ``run_training_scan``, which runs the whole multi-round schedule
 as one jitted ``lax.scan`` on device.
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
@@ -17,6 +19,11 @@ from repro.data import FederatedData, iid_partition, make_image_dataset
 from repro.federated import FLConfig, make_local_update, run_training_scan
 from repro.models import cnn
 from repro.optim import sgd
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--rounds", type=int, default=10,
+                help="rounds for the multi-round scan-engine demo")
+args = ap.parse_args()
 
 # --- setup: a small CNN and K=5 clients --------------------------------
 cfg = cnn.VGGConfig().reduced()
@@ -64,14 +71,15 @@ print("done — new global model ready for the next round.")
 # run_training_scan lifts the whole schedule (sampling, batch gathering,
 # local training, selection, aggregation, comm accounting) into one jitted
 # lax.scan over rounds — no per-round host work at all.
-print("\n--- 10 rounds with run_training_scan ---")
+print(f"\n--- {args.rounds} rounds with run_training_scan ---")
 train, _ = make_image_dataset(num_train=500, num_test=16, seed=2)
 data = FederatedData(train.xs, train.ys, iid_partition(train.ys, 10, seed=0))
 flcfg = FLConfig(algo="fedldf", num_clients=10, clients_per_round=K,
                  top_n=N_TOP, lr=0.05, mode="vmap", batch_per_client=8)
 final_params, log = run_training_scan(new_global, lambda p, b:
                                       cnn.classify_loss(p, cfg, b),
-                                      data, flcfg, rounds=10, seed=0)
+                                      data, flcfg, rounds=args.rounds,
+                                      seed=0)
 print(f"losses: {[f'{l:.3f}' for l in log.losses]}")
 print(f"total uplink {log.meter.uplink_bytes/1e6:.2f} MB over "
       f"{log.meter.rounds} rounds "

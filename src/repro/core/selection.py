@@ -11,6 +11,8 @@ Policies
 - :func:`random_per_layer` — "random" baseline: per unit, n uniform clients.
 - :func:`client_dropout`   — HDFL baseline [7]: n whole clients, all units.
 - :func:`full_participation` — FedAvg: everything.
+- :func:`bernoulli_per_layer` — FedLP (Zhu et al., arXiv:2303.06360):
+  each (client, unit) kept independently with probability p.
 """
 from __future__ import annotations
 
@@ -53,3 +55,15 @@ def client_dropout(key: jax.Array, num_clients: int, num_units: int,
 def full_participation(num_clients: int, num_units: int) -> jnp.ndarray:
     """FedAvg: s ≡ 1."""
     return jnp.ones((num_clients, num_units), dtype=jnp.float32)
+
+
+def bernoulli_per_layer(key: jax.Array, num_clients: int, num_units: int,
+                        p: float) -> jnp.ndarray:
+    """FedLP layer-wise probabilistic participation: client k uploads unit
+    u with probability ``p``, independently per (client, unit). Columns may
+    come up empty — Eq. 5 consumers fall back to the previous global value
+    for units nobody kept."""
+    if not 0.0 < p <= 1.0:
+        raise ValueError(f"keep probability out of range: p={p}")
+    return jax.random.bernoulli(key, p, (num_clients, num_units)).astype(
+        jnp.float32)

@@ -1,15 +1,32 @@
-"""Federated runtime: ClientUpdate + ServerExecute (Algorithm 1)."""
+"""Federated runtime: ClientUpdate + ServerExecute (Algorithm 1).
+
+Algorithms are strategy plugins — see :mod:`repro.federated.strategies`.
+``ALGOS`` is a live view of the registry (module ``__getattr__``), so
+``register_strategy`` additions appear here automatically.
+"""
 from repro.federated.client import make_local_update, plain_sgd_client
 from repro.federated.sampling import (local_rows, round_keys, sample_clients,
                                       sample_clients_jax)
-from repro.federated.server import (ALGOS, FLConfig, TrainLog,
-                                    build_round_fn, build_round_scan,
-                                    build_round_vmap, init_residual_store,
+from repro.federated.server import (FLConfig, TrainLog, build_round_fn,
+                                    build_round_scan, build_round_vmap,
+                                    init_residual_store,
                                     residual_store_specs, run_training,
                                     run_training_scan)
+from repro.federated.strategies import (FLStrategy, make_strategy,
+                                        register_strategy, registered_algos,
+                                        strategy_registry,
+                                        unregister_strategy)
 
 __all__ = ["make_local_update", "plain_sgd_client", "local_rows",
            "round_keys", "sample_clients", "sample_clients_jax", "ALGOS",
-           "FLConfig", "TrainLog", "build_round_fn", "build_round_scan",
-           "build_round_vmap", "init_residual_store",
-           "residual_store_specs", "run_training", "run_training_scan"]
+           "FLConfig", "FLStrategy", "TrainLog", "build_round_fn",
+           "build_round_scan", "build_round_vmap", "init_residual_store",
+           "make_strategy", "register_strategy", "registered_algos",
+           "residual_store_specs", "run_training", "run_training_scan",
+           "strategy_registry", "unregister_strategy"]
+
+
+def __getattr__(name):   # PEP 562: ALGOS tracks the live strategy registry
+    if name == "ALGOS":
+        return registered_algos()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

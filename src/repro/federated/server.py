@@ -47,8 +47,17 @@ are unchanged too. Sharded and unsharded trajectories agree to fp32
 tolerance on a fixed seed (the reduction order differs;
 tests/test_shard_engine.py and tests/test_model_axis.py pin this down).
 
-Algorithms: fedldf (paper), fedavg (Eq. 1), random (per-layer random-n),
-hdfl (client dropout [7]), fedadp (neuron pruning [6], vmap mode only).
+Algorithms are **strategy plugins** (:mod:`repro.federated.strategies`):
+the engines above are thin execution shells around the jit-safe
+:class:`~repro.federated.strategies.FLStrategy` hooks (``select``,
+``transform_upload``, ``aggregate``, ``comm_profile``, …), and
+``FLConfig.algo`` resolves through the strategy registry — built-ins are
+fedldf (paper), fedavg (Eq. 1), random (per-layer random-n), hdfl (client
+dropout [7]), fedadp (neuron pruning [6]), fedlp (layer-wise probabilistic
+pruning, arXiv:2303.06360); ``register_strategy`` adds user-defined
+schemes without touching this module. Per-strategy capability flags
+(``supports_scan`` / ``supports_mesh`` / ``supports_quantize``) replace
+engine-side special cases and are validated at ``FLConfig`` construction.
 """
 from __future__ import annotations
 
@@ -64,13 +73,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import aggregation as agg
 from repro.core import comm as comm_mod
-from repro.core import fedadp as fedadp_mod
-from repro.core import selection as sel
 from repro.core.units import UnitMap
 from repro.data.device import ClientShards
 from repro.federated.client import make_local_update
 from repro.federated.sampling import (local_rows, round_keys, sample_clients,
                                       sample_clients_jax)
+from repro.federated.strategies import (get_strategy_cls, make_strategy,
+                                        registered_algos)
 from repro.launch.mesh import (CLIENT_AXIS, MODEL_AXIS, client_mesh_size,
                                model_mesh_size, replicated_rng,
                                shard_map_norep)
@@ -81,7 +90,11 @@ from repro.optim.opt import Optimizer
 
 Pytree = Any
 
-ALGOS = ("fedldf", "fedavg", "random", "hdfl", "fedadp")
+
+def __getattr__(name):   # PEP 562: ALGOS is a live view of the registry
+    if name == "ALGOS":
+        return registered_algos()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +107,7 @@ class FLConfig:
     lr: float = 0.05
     mode: str = "vmap"             # vmap | scan
     fedadp_keep: float = 0.2       # FedADP keep fraction (equal-comm setting)
+    fedlp_p: float = 0.5           # FedLP per-layer keep probability
     batch_per_client: int = 32
     # remat local-training steps (jax.checkpoint): caps activation memory
     # when K stacked clients run inside the scan engine
@@ -108,40 +122,45 @@ class FLConfig:
     mesh: Optional[Mesh] = None
 
     def __post_init__(self):
-        assert self.algo in ALGOS, self.algo
+        # resolve through the strategy registry: unknown algos raise a
+        # ValueError listing every registered name, and per-strategy
+        # capability flags replace engine special-cases.
+        scls = get_strategy_cls(self.algo)
         assert self.mode in ("vmap", "scan")
         assert 1 <= self.top_n <= self.clients_per_round
+        if not 0.0 < self.fedlp_p <= 1.0:
+            raise ValueError(f"fedlp_p must be in (0, 1], got {self.fedlp_p}")
+        if self.quantize_bits and not scls.supports_quantize:
+            raise ValueError(
+                f"strategy {self.algo!r} declares supports_quantize=False "
+                "(fedadp aggregates pruned neurons, not quantized deltas)")
         if self.error_feedback:
             assert self.quantize_bits > 0, "error feedback needs quantization"
-            assert self.algo != "fedadp", \
-                "fedadp aggregates pruned neurons, not quantized deltas"
+        if self.mode == "scan":
+            if not scls.supports_scan:
+                raise ValueError(
+                    f"strategy {self.algo!r} declares supports_scan=False")
+            if self.quantize_bits:
+                raise NotImplementedError(
+                    "quantized uploads need stacked clients (mode='vmap')")
         if self.mesh is not None:
             assert self.mode == "vmap", \
                 "client-axis sharding needs stacked clients (mode='vmap')"
-            assert self.algo != "fedadp", \
-                "fedadp's cross-client neuron pruning is not sharded yet"
+            if not scls.supports_mesh:
+                raise ValueError(
+                    f"strategy {self.algo!r} declares supports_mesh=False "
+                    "(a declared capability — see "
+                    "repro.federated.strategies)")
             d = client_mesh_size(self.mesh)
             assert self.clients_per_round % d == 0, \
                 f"K={self.clients_per_round} must divide over {d} devices"
 
 
-def _select(algo: str, divs: Optional[jnp.ndarray], key, k: int, u: int,
-            n: int) -> jnp.ndarray:
-    if algo == "fedldf":
-        return sel.topn_divergence(divs, n)
-    if algo == "fedavg":
-        return sel.full_participation(k, u)
-    if algo == "random":
-        return sel.random_per_layer(key, k, u, n)
-    if algo == "hdfl":
-        return sel.client_dropout(key, k, u, n)
-    raise ValueError(algo)
-
-
 # ======================================================================
 # Round builders
 # ======================================================================
-def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig):
+def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig,
+                              strategy):
     """Mesh-sharded round: ``shard_map`` over ('clients'[, 'model']) axes.
 
     Every device trains its K/D local clients (vmap over the local stack),
@@ -201,33 +220,24 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig):
             params, batch)
 
         divs = None
-        if flcfg.algo == "fedldf":
+        if strategy.needs_divergence:
             divs_loc = jax.vmap(lambda p: umap.divergence(p, params))(locals_)
             divs = jax.lax.all_gather(divs_loc, ax, axis=0, tiled=True)
-        selection = _select(flcfg.algo, divs, key, k, umap.num_units,
-                            flcfg.top_n)                       # (K, U), repl.
+        selection = strategy.select(divs, key, k, umap.num_units,
+                                    flcfg.top_n)               # (K, U), repl.
         sel_loc = local_rows(selection, ax, kloc)
 
         metrics_extra = {}
-        if flcfg.quantize_bits:
-            from repro.core.compress import compress_upload
-            theta_hat, cand_res = jax.vmap(
-                lambda loc, res: compress_upload(
-                    loc, params, umap, flcfg.quantize_bits, res),
+        if strategy.transforms_upload:
+            uploads, cand_res = jax.vmap(
+                lambda loc, res: strategy.transform_upload(
+                    loc, params, umap, res),
                 in_axes=(0, 0 if residuals is not None else None),
             )(locals_, residuals)
-            locals_agg = theta_hat
-            if flcfg.error_feedback:
-                def keep_where_selected(kidx_res, kidx_old, sel_row):
-                    gate = umap.expand_to_leaves(kidx_res, sel_row)
-                    old = kidx_old if kidx_old is not None else \
-                        agg.streaming_init(params)
-                    return jax.tree.map(
-                        lambda g_, n_, o_: g_ * n_ + (1 - g_) * o_,
-                        gate, kidx_res, old)
-
+            if strategy.tracks_residuals:
                 new_residuals = jax.vmap(
-                    keep_where_selected,
+                    lambda cand, old, s: strategy.update_residual(
+                        cand, old, s, umap, params),
                     in_axes=(0, 0 if residuals is not None else None, 0),
                 )(cand_res, residuals, sel_loc)
                 if m > 1:   # back to this device's 1/M store-row shard
@@ -235,7 +245,7 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig):
                         new_residuals, pspecs, m, MODEL_AXIS, offset=1)
                 metrics_extra["residuals"] = new_residuals
         else:
-            locals_agg = locals_
+            uploads = locals_
 
         # ONE fused cross-device reduction per round: the Eq. 5 numerators/
         # denominator, the loss sum, and the (additive) comm-byte totals
@@ -244,29 +254,28 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig):
         # oversubscribed CPU meshes as well as accelerator fabrics. The
         # psum reduces over 'clients' ONLY: on a 2-D mesh each model
         # column reduces its own 1/M numerator slice, leaving the 'model'
-        # shards intact.
-        parts, denom_loc = agg.stacked_psum_parts(locals_agg, umap, sel_loc,
-                                                  data_sizes)
+        # shards intact. Strategies plug in via psum_parts/psum_finalize
+        # (the two halves of their aggregate()); comm_profile is called on
+        # the LOCAL selection rows, so every field but savings_frac must
+        # be additive over the client axis.
+        parts, denom_loc = strategy.psum_parts(uploads, umap, sel_loc,
+                                               data_sizes)
         if m > 1:
             parts = tree_shard_slice(parts, pspecs, m, MODEL_AXIS)
-        comm_loc = comm_mod.round_comm(
-            sel_loc, umap,
-            divergence_feedback=(flcfg.algo == "fedldf"),
-            param_bytes_override=(flcfg.quantize_bits / 8.0
-                                  if flcfg.quantize_bits else None))
+        comm_loc = strategy.comm_profile(sel_loc, umap)
         comm_add = {n_: v for n_, v in comm_loc.items()
                     if n_ != "savings_frac"}   # byte counts are additive
         (parts, denom), loss_sum, comm = jax.lax.psum(
             ((parts, denom_loc), losses.sum(), comm_add), ax)
-        new_params = agg.stacked_psum_finalize(parts, denom, umap,
-                                               params_shard, params_shard)
+        new_params = strategy.psum_finalize(parts, denom, umap,
+                                            params_shard, params_shard)
         comm["savings_frac"] = 1.0 - comm["uplink_total"] / \
             comm["fedavg_uplink"]
         loss = loss_sum / k
         return new_params, {"loss": loss, "comm": comm,
                             "selection": selection, **metrics_extra}
 
-    ef = bool(flcfg.quantize_bits and flcfg.error_feedback)
+    ef = bool(strategy.tracks_residuals)
     out_metrics_spec = {"loss": P(), "comm": P(), "selection": P()}
 
     def round_fn(params, batch, data_sizes, key, residuals=None):
@@ -303,8 +312,9 @@ def build_round_vmap(loss_fn, umap: UnitMap, flcfg: FLConfig,
     opt = opt or sgd(flcfg.lr)
     local_update = make_local_update(loss_fn, opt, flcfg.local_steps,
                                      remat=flcfg.remat)
+    strategy = make_strategy(flcfg)
     if flcfg.mesh is not None:
-        return _build_round_vmap_sharded(local_update, umap, flcfg)
+        return _build_round_vmap_sharded(local_update, umap, flcfg, strategy)
     k = flcfg.clients_per_round
 
     def round_fn(params: Pytree, batch: dict, data_sizes: jnp.ndarray,
@@ -312,68 +322,39 @@ def build_round_vmap(loss_fn, umap: UnitMap, flcfg: FLConfig,
         locals_, losses = jax.vmap(local_update, in_axes=(None, 0))(
             params, batch)
 
-        if flcfg.algo == "fedadp":
-            new_params = fedadp_mod.aggregate_fedadp(
-                locals_, params, data_sizes, flcfg.fedadp_keep)
-            selection = sel.full_participation(k, umap.num_units)
-            comm = comm_mod.round_comm(selection, umap,
-                                       divergence_feedback=False)
-            # overwrite with FedADP's own accounting. The payload must be
-            # recomputed alongside the total, or the metrics dict goes
-            # internally inconsistent (payload + feedback != total — the
-            # pre-fix state left uplink_payload at full participation).
-            comm["uplink_total"] = jnp.float32(0.0) + comm["fedavg_uplink"] \
-                * flcfg.fedadp_keep
-            comm["uplink_payload"] = comm["uplink_total"] \
-                - comm["uplink_feedback"]
-            comm["savings_frac"] = 1.0 - flcfg.fedadp_keep
-            return new_params, {"loss": losses.mean(), "comm": comm,
-                                "selection": selection}
-
         # divergence feedback (Eq. 3) is computed on the TRUE local model —
-        # quantization below only affects the uploaded payload.
+        # upload transforms (e.g. quantization) below only affect the
+        # uploaded payload.
         divs = None
-        if flcfg.algo == "fedldf":
+        if strategy.needs_divergence:
             divs = jax.vmap(lambda p: umap.divergence(p, params))(locals_)
-        selection = _select(flcfg.algo, divs, key, k, umap.num_units,
-                            flcfg.top_n)
+        selection = strategy.select(divs, key, k, umap.num_units,
+                                    flcfg.top_n)
 
         metrics_extra = {}
-        if flcfg.quantize_bits:
-            # beyond-paper: the server reconstructs Ĝ + dequant(Q(Δ + e))
-            # for uploaded layers; error feedback residuals update only
-            # where a layer was actually uploaded (s[k,u] = 1).
-            from repro.core.compress import compress_upload
-            theta_hat, cand_res = jax.vmap(
-                lambda loc, res: compress_upload(
-                    loc, params, umap, flcfg.quantize_bits, res),
+        if strategy.transforms_upload:
+            # e.g. quantized deltas: the server reconstructs
+            # Ĝ + dequant(Q(Δ + e)) for uploaded layers; error feedback
+            # residuals update only where a layer was actually uploaded
+            # (s[k,u] = 1).
+            uploads, cand_res = jax.vmap(
+                lambda loc, res: strategy.transform_upload(
+                    loc, params, umap, res),
                 in_axes=(0, 0 if residuals is not None else None),
             )(locals_, residuals)
-            locals_agg = theta_hat
-            if flcfg.error_feedback:
-                def keep_where_selected(kidx_res, kidx_old, sel_row):
-                    gate = umap.expand_to_leaves(kidx_res, sel_row)
-                    old = kidx_old if kidx_old is not None else \
-                        agg.streaming_init(params)
-                    return jax.tree.map(
-                        lambda g_, n_, o_: g_ * n_ + (1 - g_) * o_,
-                        gate, kidx_res, old)
-
+            if strategy.tracks_residuals:
                 new_residuals = jax.vmap(
-                    keep_where_selected,
+                    lambda cand, old, s: strategy.update_residual(
+                        cand, old, s, umap, params),
                     in_axes=(0, 0 if residuals is not None else None, 0),
                 )(cand_res, residuals, selection)
                 metrics_extra["residuals"] = new_residuals
         else:
-            locals_agg = locals_
+            uploads = locals_
 
-        new_params = agg.aggregate_stacked(locals_agg, umap, selection,
-                                           data_sizes, fallback=params)
-        comm = comm_mod.round_comm(
-            selection, umap,
-            divergence_feedback=(flcfg.algo == "fedldf"),
-            param_bytes_override=(flcfg.quantize_bits / 8.0
-                                  if flcfg.quantize_bits else None))
+        new_params = strategy.aggregate(uploads, umap, selection,
+                                        data_sizes, params)
+        comm = strategy.comm_profile(selection, umap)
         return new_params, {"loss": losses.mean(), "comm": comm,
                             "selection": selection, **metrics_extra}
 
@@ -384,23 +365,31 @@ def build_round_scan(loss_fn, umap: UnitMap, flcfg: FLConfig,
                      opt: Optimizer | None = None):
     """Round function with sequential clients + two-phase recompute.
 
-    Memory: O(global + 1 local + 1 accumulator) models, independent of K.
+    Memory (``eq5_weighted`` strategies): O(global + 1 local +
+    1 accumulator) models, independent of K — selected layers are streamed
+    into the Eq. 5 accumulator as each client trains. Strategies whose
+    aggregation is not an Eq. 5 weighted mean (e.g. FedADP's element-wise
+    neuron masks) instead have their sequentially-trained locals *stacked*
+    by the scan and fed to the same :meth:`FLStrategy.aggregate` hook used
+    in vmap mode — O(K) parameter memory, but still O(1) activation
+    memory, which is the scan engine's binding constraint for deep models.
     """
-    if flcfg.algo == "fedadp":
-        raise NotImplementedError("fedadp needs stacked clients (vmap mode)")
     if flcfg.quantize_bits:
         raise NotImplementedError(
             "quantized uploads need stacked clients (vmap mode)")
+    strategy = make_strategy(flcfg)
+    if not strategy.supports_scan:
+        raise NotImplementedError(
+            f"strategy {strategy.name!r} declares supports_scan=False")
     opt = opt or sgd(flcfg.lr)
     local_update = make_local_update(loss_fn, opt, flcfg.local_steps,
                                      remat=flcfg.remat)
     k = flcfg.clients_per_round
-    needs_divergence = flcfg.algo == "fedldf"
 
     def round_fn(params: Pytree, batch: dict, data_sizes: jnp.ndarray,
                  key: jax.Array, residuals: Pytree = None):
         # ---- phase 1: divergence feedback (only if the policy needs it)
-        if needs_divergence:
+        if strategy.needs_divergence:
             def phase1(carry, batch_k):
                 local, loss = local_update(params, batch_k)
                 return carry, (umap.divergence(local, params), loss)
@@ -409,23 +398,34 @@ def build_round_scan(loss_fn, umap: UnitMap, flcfg: FLConfig,
         else:
             divs, losses1 = None, None
 
-        selection = _select(flcfg.algo, divs, key, k, umap.num_units,
-                            flcfg.top_n)
-        w, denom = agg.unit_weights(selection, data_sizes)
-        frac = w / jnp.where(denom > 0, denom, 1.0)[None, :]   # (K, U)
+        selection = strategy.select(divs, key, k, umap.num_units,
+                                    flcfg.top_n)
 
-        # ---- phase 2: recompute local training, stream selected layers in
-        def phase2(acc, inp):
-            batch_k, frac_k = inp
-            local, loss = local_update(params, batch_k)
-            return agg.streaming_add(acc, local, umap, frac_k), loss
+        if strategy.eq5_weighted:
+            w, denom = agg.unit_weights(selection, data_sizes)
+            frac = w / jnp.where(denom > 0, denom, 1.0)[None, :]   # (K, U)
 
-        acc0 = agg.streaming_init(params)
-        acc, losses2 = jax.lax.scan(phase2, acc0, (batch, frac))
-        new_params = agg.streaming_finalize(acc, umap, denom, params)
+            # ---- phase 2: recompute local training, stream layers in
+            def phase2(acc, inp):
+                batch_k, frac_k = inp
+                local, loss = local_update(params, batch_k)
+                return agg.streaming_add(acc, local, umap, frac_k), loss
 
-        comm = comm_mod.round_comm(selection, umap,
-                                   divergence_feedback=needs_divergence)
+            acc0 = agg.streaming_init(params)
+            acc, losses2 = jax.lax.scan(phase2, acc0, (batch, frac))
+            new_params = agg.streaming_finalize(acc, umap, denom, params)
+        else:
+            # ---- phase 2 (non-Eq.5 aggregation, e.g. FedADP): train
+            # sequentially, let the scan stack the locals, and call the
+            # same stacked-clients aggregate hook as the vmap engine.
+            def phase2_stack(carry, batch_k):
+                return carry, local_update(params, batch_k)
+
+            _, (stacked, losses2) = jax.lax.scan(phase2_stack, None, batch)
+            new_params = strategy.aggregate(stacked, umap, selection,
+                                            data_sizes, params)
+
+        comm = strategy.comm_profile(selection, umap)
         loss = (losses1 if losses1 is not None else losses2).mean()
         return new_params, {"loss": loss, "comm": comm,
                             "selection": selection}
@@ -460,8 +460,13 @@ def _umap_cache_key(umap: UnitMap) -> tuple:
 def _cached(kind: str, loss_fn, umap: UnitMap, flcfg: FLConfig, build):
     """NOTE: keyed on ``loss_fn`` *identity* — pass a stable function (module
     function, bound method, or a lambda created once) to hit the cache;
-    a lambda re-created per call misses every time."""
-    key = (kind, loss_fn, _umap_cache_key(umap), flcfg)
+    a lambda re-created per call misses every time. The key also carries
+    the *class* currently registered under ``flcfg.algo``: the registry is
+    mutable (unregister + re-register is the iterate-on-a-plugin flow), so
+    an equal FLConfig must not reuse a round compiled for a previously
+    registered strategy class."""
+    key = (kind, loss_fn, _umap_cache_key(umap), flcfg,
+           get_strategy_cls(flcfg.algo))
     try:
         fn = _JIT_CACHE.get(key)
     except TypeError:       # unhashable loss_fn — skip caching

@@ -1,0 +1,39 @@
+"""Strategy plugins for the federated round engine.
+
+One engine, pluggable algorithms: the round builders in
+:mod:`repro.federated.server` drive the jit-safe hook surface of
+:class:`FLStrategy`, and ``FLConfig.algo`` resolves through the registry
+here. See :mod:`repro.federated.strategies.base` for the hook contract and
+capability flags, and the README's "Writing a strategy" section for a
+walkthrough.
+
+    from repro.federated.strategies import FLStrategy, register_strategy
+
+    @register_strategy("mystrat")
+    class MyStrategy(FLStrategy):
+        def select(self, divs, key, k, u, n):
+            ...
+
+    FLConfig(algo="mystrat")   # now valid; appears in ALGOS + benches
+"""
+from repro.federated.strategies.base import (FLStrategy, get_strategy_cls,
+                                             register_strategy,
+                                             registered_algos,
+                                             strategy_registry,
+                                             unregister_strategy)
+from repro.federated.strategies import builtin  # noqa: F401  (registers)
+from repro.federated.strategies.compression import QuantizedUpload
+
+__all__ = ["FLStrategy", "QuantizedUpload", "get_strategy_cls",
+           "make_strategy", "register_strategy", "registered_algos",
+           "strategy_registry", "unregister_strategy"]
+
+
+def make_strategy(flcfg) -> FLStrategy:
+    """Resolve ``flcfg.algo`` and compose the quantize(+EF) wrapper when
+    ``flcfg.quantize_bits`` is set. The engines call this once per round
+    builder; the result is stateless and jit-closure-safe."""
+    strat = get_strategy_cls(flcfg.algo)(flcfg)
+    if flcfg.quantize_bits:
+        strat = QuantizedUpload(strat, flcfg)
+    return strat

@@ -1,0 +1,195 @@
+"""FLStrategy protocol + registry: pluggable FL algorithms for one engine.
+
+An :class:`FLStrategy` packages everything algorithm-specific about a
+federated round behind a fixed set of **jit-safe hooks**, so the three
+execution shells in :mod:`repro.federated.server` (single-device ``vmap``,
+sequential ``scan``, and the mesh-sharded ``shard_map`` round) share one
+round body instead of re-implementing per-algorithm branches three times.
+
+Hook contract (every hook is traced under ``jax.jit`` — no Python control
+flow on traced values, no host callbacks, static shapes only):
+
+- ``select(divs, key, k, u, n) -> (K, U) float32 selection matrix`` —
+  which (client, layer-unit) pairs are uploaded and aggregated (Eq. 4 /
+  the baselines' policies). ``divs`` is the (K, U) divergence matrix when
+  :attr:`needs_divergence` is set, else ``None``. ``key`` is this round's
+  algorithm PRNG key (same stream in every engine, so vmap/scan/sharded
+  trajectories agree).
+- ``transform_upload(local, global_params, umap, residual)
+  -> (upload, candidate_residual)`` — per-client payload transform
+  (identity by default; the quantize+error-feedback wrapper compresses
+  here). Called under ``jax.vmap`` over the client axis; only consulted
+  when :attr:`transforms_upload` is set.
+- ``update_residual(cand_res, old_res, sel_row, umap, global_params)`` —
+  per-client error-feedback residual update, gated on the selection row
+  (residuals advance only where a layer actually shipped). Only consulted
+  when :attr:`tracks_residuals` is set.
+- ``aggregate(uploads, umap, selection, data_sizes, global_params,
+  axis_name=None) -> new global params`` — the server-side reduction over
+  client-stacked uploads. The default is the paper's Eq. 5 masked
+  weighted mean (:func:`repro.core.aggregation.aggregate_stacked`).
+- ``psum_parts`` / ``psum_finalize`` — the two halves of the aggregation
+  that the mesh-sharded engine fuses into its single per-round ``psum``
+  (additive local partials, then a replicated epilogue). The defaults
+  implement Eq. 5; a strategy that overrides :meth:`aggregate` must either
+  declare ``supports_mesh = False`` or override these to match.
+- ``comm_profile(selection, umap, param_bytes_override=None) -> dict`` —
+  per-round communication accounting. Must preserve the ledger invariant
+  ``uplink_payload + uplink_feedback == uplink_total`` (tested for every
+  registered strategy). Inside the sharded round it is called on the
+  *local* selection rows and every field except ``savings_frac`` must be
+  additive across devices (the engine psums them and recomputes
+  ``savings_frac``).
+
+Capability flags (class attributes, read by ``FLConfig`` validation and
+the engines):
+
+- ``needs_divergence`` — the engine computes the (K, U) Eq. 3 divergence
+  matrix (and accounts its feedback uplink) before calling ``select``.
+- ``supports_scan`` — the strategy can run under ``mode="scan"``.
+  Strategies with ``eq5_weighted`` stream clients through an O(1)-client
+  accumulator; others have their sequentially-trained locals stacked by
+  the scan and fed to the same :meth:`aggregate` hook (O(K) param memory,
+  still O(1) activation memory).
+- ``supports_mesh`` — the strategy can run client-sharded over a device
+  mesh (requires Eq. 5 ``psum_parts``/``psum_finalize`` or overrides).
+- ``supports_quantize`` — the quantize(+EF) wrapper may be composed on
+  top (``FLConfig(quantize_bits=...)``).
+- ``eq5_weighted`` — aggregation is exactly Eq. 5 over the selection
+  matrix, so the engines may execute it as a streaming accumulation
+  (scan) or a fused-psum partial reduction (mesh). Set it to ``False``
+  whenever :meth:`aggregate` is overridden with different math.
+
+Register with :func:`register_strategy`; ``FLConfig(algo=<name>)`` then
+resolves through the registry, and the name shows up in
+``repro.federated.ALGOS`` and ``benchmarks/fl_comparison.py``
+automatically.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+from repro.core import aggregation as agg
+from repro.core import comm as comm_mod
+from repro.core.units import UnitMap
+
+Pytree = Any
+
+
+class FLStrategy:
+    """Base strategy: Eq. 5 aggregation over a subclass-chosen selection."""
+
+    # registry name; filled in by @register_strategy
+    name: str = "?"
+    # ---- capability flags (see module docstring) ----
+    needs_divergence: bool = False
+    supports_scan: bool = True
+    supports_mesh: bool = True
+    supports_quantize: bool = True
+    eq5_weighted: bool = True
+    # ---- engine dispatch flags ----
+    transforms_upload: bool = False
+    tracks_residuals: bool = False
+
+    def __init__(self, cfg):
+        self.cfg = cfg   # the FLConfig (duck-typed; strategies read knobs)
+
+    # ------------------------------------------------------------------
+    def select(self, divs: Optional[jnp.ndarray], key, k: int, u: int,
+               n: int) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def transform_upload(self, local: Pytree, global_params: Pytree,
+                         umap: UnitMap, residual: Optional[Pytree]
+                         ) -> tuple[Pytree, Optional[Pytree]]:
+        return local, None
+
+    def update_residual(self, cand_res: Pytree, old_res: Optional[Pytree],
+                        sel_row: jnp.ndarray, umap: UnitMap,
+                        global_params: Pytree) -> Pytree:
+        raise NotImplementedError
+
+    def aggregate(self, uploads: Pytree, umap: UnitMap,
+                  selection: jnp.ndarray, data_sizes: jnp.ndarray,
+                  global_params: Pytree,
+                  axis_name: str | None = None) -> Pytree:
+        return agg.aggregate_stacked(uploads, umap, selection, data_sizes,
+                                     fallback=global_params,
+                                     axis_name=axis_name)
+
+    # ---- mesh-sharded halves of aggregate() (fused-psum protocol) ----
+    def psum_parts(self, uploads: Pytree, umap: UnitMap,
+                   sel_loc: jnp.ndarray, data_sizes: jnp.ndarray
+                   ) -> tuple[Pytree, jnp.ndarray]:
+        return agg.stacked_psum_parts(uploads, umap, sel_loc, data_sizes)
+
+    def psum_finalize(self, parts: Pytree, denom: jnp.ndarray,
+                      umap: UnitMap, params_shard: Pytree,
+                      fallback: Pytree) -> Pytree:
+        return agg.stacked_psum_finalize(parts, denom, umap, params_shard,
+                                         fallback)
+
+    # ------------------------------------------------------------------
+    def comm_profile(self, selection: jnp.ndarray, umap: UnitMap,
+                     param_bytes_override: float | None = None) -> dict:
+        return comm_mod.round_comm(
+            selection, umap, divergence_feedback=self.needs_divergence,
+            param_bytes_override=param_bytes_override)
+
+
+# ======================================================================
+# Registry
+# ======================================================================
+_REGISTRY: dict[str, type[FLStrategy]] = {}
+
+
+def register_strategy(name: str, *, override: bool = False):
+    """Class decorator: make ``FLConfig(algo=name)`` resolve to this
+    strategy (and list it in ``ALGOS`` / the comparison bench).
+
+    Registering a name that is already taken by a *different* class raises
+    (a plugin silently replacing e.g. the ``fedavg`` baseline would corrupt
+    every savings-vs-fedavg comparison with no signal); pass
+    ``override=True`` to replace intentionally. Re-registering the same
+    class under the same name is an idempotent no-op (module re-imports).
+    """
+
+    def deco(cls: type[FLStrategy]) -> type[FLStrategy]:
+        if not (isinstance(cls, type) and issubclass(cls, FLStrategy)):
+            raise TypeError(f"{cls!r} is not an FLStrategy subclass")
+        existing = _REGISTRY.get(name)
+        if existing is not None and existing is not cls and not override:
+            raise ValueError(
+                f"strategy name {name!r} is already registered to "
+                f"{existing.__name__}; pass register_strategy(name, "
+                "override=True) to replace it")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def unregister_strategy(name: str) -> None:
+    """Remove a registered strategy (tests / plugin teardown)."""
+    _REGISTRY.pop(name, None)
+
+
+def registered_algos() -> tuple[str, ...]:
+    """Registered algorithm names, in registration order."""
+    return tuple(_REGISTRY)
+
+
+def strategy_registry() -> dict[str, type[FLStrategy]]:
+    return dict(_REGISTRY)
+
+
+def get_strategy_cls(name: str) -> type[FLStrategy]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown FL algorithm {name!r}; registered strategies: "
+            f"{', '.join(sorted(_REGISTRY)) or '(none)'}") from None

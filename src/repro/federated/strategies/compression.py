@@ -1,0 +1,78 @@
+"""Quantize(+error-feedback) upload wrapper, as a composable strategy.
+
+``FLConfig(quantize_bits=b)`` composes :class:`QuantizedUpload` around the
+configured base strategy (see :func:`repro.federated.strategies.make_strategy`):
+selection and aggregation delegate to the inner strategy unchanged, while
+the per-client payload is re-expressed as ``Ĝ + dequant(Q_b(Δ + e))`` with
+optional client-side error feedback (``FLConfig(error_feedback=True)``)
+whose residuals advance only where a layer actually shipped. The comm
+profile re-prices parameter bytes at ``b/8`` via the inner strategy's own
+profile, so e.g. FedLP's keep-mask header survives composition.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import aggregation as agg
+from repro.core.compress import compress_upload
+from repro.federated.strategies.base import FLStrategy
+
+
+class QuantizedUpload(FLStrategy):
+    """Wrap ``inner`` with int-b delta quantization (+ error feedback)."""
+
+    transforms_upload = True
+    supports_scan = False       # quantized uploads need stacked clients
+    supports_quantize = False   # no double-wrapping
+
+    def __init__(self, inner: FLStrategy, cfg):
+        super().__init__(cfg)
+        assert cfg.quantize_bits > 0
+        assert type(inner).supports_quantize, inner.name
+        self.inner = inner
+        self.name = f"{inner.name}+q{cfg.quantize_bits}"
+        # mirror the inner strategy's declared behaviour (instance attrs
+        # shadow the class-level flags)
+        self.needs_divergence = inner.needs_divergence
+        self.supports_mesh = inner.supports_mesh
+        self.eq5_weighted = inner.eq5_weighted
+        self.tracks_residuals = bool(cfg.error_feedback)
+
+    # ---- delegated hooks ----
+    def select(self, divs, key, k, u, n):
+        return self.inner.select(divs, key, k, u, n)
+
+    def aggregate(self, uploads, umap, selection, data_sizes,
+                  global_params, axis_name=None):
+        return self.inner.aggregate(uploads, umap, selection, data_sizes,
+                                    global_params, axis_name=axis_name)
+
+    def psum_parts(self, uploads, umap, sel_loc, data_sizes):
+        return self.inner.psum_parts(uploads, umap, sel_loc, data_sizes)
+
+    def psum_finalize(self, parts, denom, umap, params_shard, fallback):
+        return self.inner.psum_finalize(parts, denom, umap, params_shard,
+                                        fallback)
+
+    # ---- the wrapper's own behaviour ----
+    def transform_upload(self, local, global_params, umap, residual):
+        # Θ̂ = Ĝ + dequant(Q_b(Δ + e)); divergence feedback (Eq. 3) was
+        # already computed on the TRUE local model by the engine, so only
+        # the uploaded payload is affected.
+        return compress_upload(local, global_params, umap,
+                               self.cfg.quantize_bits, residual)
+
+    def update_residual(self, cand_res, old_res, sel_row, umap,
+                        global_params):
+        # residuals advance only where a layer was actually uploaded
+        # (s[k,u] = 1); elsewhere the old residual is carried forward.
+        gate = umap.expand_to_leaves(cand_res, sel_row)
+        old = old_res if old_res is not None else \
+            agg.streaming_init(global_params)
+        return jax.tree.map(lambda g_, n_, o_: g_ * n_ + (1 - g_) * o_,
+                            gate, cand_res, old)
+
+    def comm_profile(self, selection, umap, param_bytes_override=None):
+        return self.inner.comm_profile(
+            selection, umap,
+            param_bytes_override=self.cfg.quantize_bits / 8.0)

@@ -30,7 +30,8 @@ def setup():
     return params, umap, batch, sizes, key, k
 
 
-@pytest.mark.parametrize("algo", ["fedldf", "fedavg", "random", "hdfl"])
+@pytest.mark.parametrize("algo", ["fedldf", "fedavg", "random", "hdfl",
+                                  "fedlp"])
 def test_vmap_scan_equivalence(setup, algo):
     """The two execution layouts are semantically identical."""
     params, umap, batch, sizes, key, k = setup
@@ -78,9 +79,16 @@ def test_fedadp_runs_and_prunes(setup):
         pytest.approx(float(c["uplink_total"]))
     assert float(c["uplink_payload"]) == \
         pytest.approx(0.25 * float(c["fedavg_uplink"]))
-    fl_scan = FLConfig(algo="fedadp", clients_per_round=k, mode="scan")
-    with pytest.raises(NotImplementedError):
-        build_round_fn(_loss, umap, fl_scan)
+    # scan mode (unlocked by the strategy refactor): the engine stacks the
+    # sequentially-trained locals and feeds the same aggregate hook, so
+    # the two layouts agree on a fixed seed.
+    fl_scan = FLConfig(algo="fedadp", clients_per_round=k, fedadp_keep=0.25,
+                       mode="scan")
+    ps, ms = jax.jit(build_round_fn(_loss, umap, fl_scan))(params, batch,
+                                                           sizes, key)
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(ps)):
+        np.testing.assert_allclose(a, b, atol=2e-5)
+    assert float(ms["comm"]["savings_frac"]) == pytest.approx(0.75, abs=0.01)
 
 
 def test_selection_favors_divergent_clients(setup):

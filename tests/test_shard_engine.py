@@ -73,11 +73,12 @@ def _cfg(mesh, algo="fedldf", **kw):
 
 
 # ----------------------------------------------------------------------
-@pytest.mark.parametrize("algo", ["fedldf", "fedavg"])
+@pytest.mark.parametrize("algo", ["fedldf", "fedavg", "fedlp"])
 @pytest.mark.parametrize("mesh_size", needs_devices)
 def test_sharded_engine_matches_unsharded(task, algo, mesh_size):
     """Fixed seed ⇒ same trajectory across mesh sizes 1/2/4 and mesh=None,
-    for the paper algorithm (divergence all-gather + top-n) and FedAvg."""
+    for the paper algorithm (divergence all-gather + top-n), FedAvg, and
+    FedLP (replicated Bernoulli selection + additive keep-mask comm)."""
     params, data = task
     p0, l0 = run_training_scan(params, _loss, data, _cfg(None, algo),
                                rounds=4, seed=3)

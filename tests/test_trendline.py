@@ -1,10 +1,12 @@
 """CI perf-trendline logic (benchmarks/trendline.py): metric extraction
-from BENCH_ci.json dumps and the fail-soft regression comparison."""
+from BENCH_ci.json dumps, the windowed-median baseline, and the fail-soft
+regression comparison."""
 import json
 
 import pytest
 
-from benchmarks.trendline import compare, extract, main
+from benchmarks.trendline import (WINDOW, compare, extract, main,
+                                  median_baseline)
 
 BENCH = {
     "ci": True,
@@ -52,6 +54,53 @@ def test_compare_improvements_and_disjoint_keys_ok():
     assert regs == []
     assert any("(new)" in line for line in lines) and \
         any("(gone)" in line for line in lines)
+
+
+def test_median_baseline_resists_one_noisy_runner():
+    """One inflated (or deflated) run in the window no longer IS the
+    baseline: the median of the last runs absorbs it."""
+    steady = {"engine.scan_rate": 100.0}
+    inflated = {"engine.scan_rate": 300.0}    # noisy-fast runner
+    baseline = median_baseline([steady, steady, inflated])
+    assert baseline["engine.scan_rate"] == 100.0
+    # a healthy current run is NOT flagged against the inflated outlier
+    regs, _ = compare(baseline, {"engine.scan_rate": 95.0}, threshold=0.2)
+    assert regs == []
+    # ...and a deflated outlier can't mask a real regression
+    deflated = {"engine.scan_rate": 10.0}
+    baseline = median_baseline([steady, steady, deflated])
+    regs, _ = compare(baseline, {"engine.scan_rate": 50.0}, threshold=0.2)
+    assert len(regs) == 1
+
+
+def test_median_baseline_window_and_partial_metrics():
+    # only the last WINDOW runs count (old history dropped from the front)
+    runs = [{"m": 1.0}] * 10 + [{"m": 5.0}] * WINDOW
+    assert median_baseline(runs)["m"] == 5.0
+    # a metric present in just one run is still tracked
+    got = median_baseline([{"a": 1.0}, {"a": 3.0, "b": 7.0}])
+    assert got == {"a": 2.0, "b": 7.0}
+
+
+def test_main_multiple_prev_median(tmp_path, capsys):
+    """--prev is repeatable; the gate compares against the median, and
+    unreadable files in the list are skipped individually."""
+    paths = []
+    for i, rate in enumerate((200.0, 210.0, 1000.0)):   # one noisy outlier
+        p = tmp_path / f"prev{i}.json"
+        p.write_text(json.dumps({"engine": {"scan_rate": rate}}))
+        paths.append(str(p))
+    paths.append(str(tmp_path / "missing.json"))
+    curr = tmp_path / "curr.json"
+    curr.write_text(json.dumps({"engine": {"scan_rate": 195.0}}))
+    argv = []
+    for p in paths:
+        argv += ["--prev", p]
+    # median 210 -> 195 is -7%: within noise despite the 1000.0 outlier
+    assert main(argv + ["--curr", str(curr), "--strict"]) == 0
+    out = capsys.readouterr().out
+    assert "skipping unreadable" in out
+    assert "median of last 3" in out
 
 
 def test_main_fail_soft_vs_strict(tmp_path, capsys):
