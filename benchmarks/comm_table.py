@@ -14,6 +14,7 @@ import jax
 
 from repro.core import UnitMap, round_comm, selection as sel
 from repro.core.fedadp import comm_bytes as fedadp_bytes
+from repro.federated.strategies.fedlama import expected_round_bytes
 from repro.models import cnn
 
 
@@ -44,6 +45,13 @@ def run(out=sys.stdout, rounds: int = 1000):
         rows.append((algo, up))
     # FedADP at keep=0.2 (paper's equal-comm setting)
     rows.append(("fedadp", fedadp_bytes(params, k, 0.2)))
+    # FedLAMA at the same equal-comm pinning (τ' = K/n = 5): steady-state
+    # per-round bytes depend on the run's discrepancy trace, so the table
+    # carries the model's bracket — 'hi' = every unit on the base interval
+    # τ', 'lo' = every unit demoted to λτ' (λ=2).
+    lama = expected_round_bytes(umap, k, tau=k // n, lam=2)
+    rows.append(("fedlama_hi", lama["hi"]))
+    rows.append(("fedlama_lo", lama["lo"]))
 
     for algo, up in rows:
         sav = 1 - up / fedavg_up

@@ -11,7 +11,9 @@ Scale knobs default to a CI-friendly reduction of the paper's setup
 (N=20 clients, K=10/round, n=2 — same n/K=0.2 ratio as the paper's
 K=20/n=4); pass --paper-scale for the full §III-A configuration.
 Equal-communication setting: FedADP's keep fraction and FedLP's layer
-keep probability are both pinned to n/K, so the error-vs-bytes ordering
+keep probability are both pinned to n/K, and FedLAMA's base aggregation
+interval τ' is pinned to round(K/n) (steady-state uplink ≈ FedAvg/τ' ≈
+n/K of FedAvg before any λτ' demotions), so the error-vs-bytes ordering
 compares like against like.
 """
 from __future__ import annotations
@@ -63,7 +65,8 @@ def run(paper_scale: bool = False, rounds: int = 40, seed: int = 0,
             fl = FLConfig(algo=algo, num_clients=n_clients,
                           clients_per_round=k, top_n=n, lr=0.08,
                           mode="vmap", batch_per_client=batch,
-                          fedadp_keep=n / k, fedlp_p=n / k)
+                          fedadp_keep=n / k, fedlp_p=n / k,
+                          fedlama_tau=max(1, round(k / n)))
             params = cnn.init_params(jax.random.PRNGKey(seed), cfg)
             params, log = run_training(params, loss_fn, data, fl,
                                        rounds=rounds, eval_fn=eval_fn,
@@ -76,9 +79,17 @@ def run(paper_scale: bool = False, rounds: int = 40, seed: int = 0,
 
 
 def summarize(results, out=sys.stdout):
-    """Derived claims: savings ratio + error ordering (paper §III-B)."""
-    print("# summary: algo, final_err, total_uplink_mb, savings_vs_fedavg",
-          file=out)
+    """Derived claims: savings ratio + error ordering (paper §III-B).
+
+    All columns are computed from the meter's *accumulated* byte totals,
+    never from any single round's profile scaled by the round count —
+    strategies with non-constant per-round bytes (fedlama's round-0 full
+    sync + interval-expiry schedule, fedlp's Bernoulli draws) would make
+    that extrapolation wrong. ``avg_round_mb`` is total/rounds for the
+    same reason.
+    """
+    print("# summary: algo, final_err, total_uplink_mb, avg_round_mb, "
+          "savings_vs_fedavg", file=out)
     algos = []
     for (_, algo) in results:          # registry order, deduped
         if algo not in algos:
@@ -92,7 +103,8 @@ def summarize(results, out=sys.stdout):
             # bytes, so the savings column survives algo subsets that
             # omit fedavg itself (for fedavg, up == base -> 0.000)
             base = log.meter.fedavg_uplink_bytes
-            print(f"# {fig},{algo},{err:.4f},{up/1e6:.1f},"
+            avg = up / max(log.meter.rounds, 1)
+            print(f"# {fig},{algo},{err:.4f},{up/1e6:.1f},{avg/1e6:.2f},"
                   f"{1 - up / base:.3f}", file=out)
 
 

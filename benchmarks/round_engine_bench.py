@@ -122,6 +122,15 @@ def run(mode: str = "floor", rounds: int = 300, reps: int = 5,
     scan_rate = _best_rate(
         lambda: run_training_scan(params, loss, shards, flcfg,
                                   rounds=rounds, seed=0), rounds, reps)
+    # the stateful-strategy rate: fedlama threads cross-round interval
+    # state through the scan carry, so scan_rate vs fedlama_rate bounds the
+    # state-seam overhead per round (trendline.py gates it per-PR)
+    lama_cfg = FLConfig(algo="fedlama", num_clients=N_CLIENTS,
+                        clients_per_round=K, top_n=TOP_N, mode="vmap",
+                        batch_per_client=BATCH_BY_MODE[mode])
+    fedlama_rate = _best_rate(
+        lambda: run_training_scan(params, loss, shards, lama_cfg,
+                                  rounds=rounds, seed=0), rounds, reps)
     speedup = scan_rate / host_rate
     print(f"workload={mode} N={N_CLIENTS} K={K} n={TOP_N} "
           f"B={BATCH_BY_MODE[mode]} rounds={rounds}", file=out)
@@ -129,11 +138,14 @@ def run(mode: str = "floor", rounds: int = 300, reps: int = 5,
           f"({1e3/host_rate:6.2f} ms/round)", file=out)
     print(f"scan engine : {scan_rate:8.1f} rounds/s "
           f"({1e3/scan_rate:6.2f} ms/round)", file=out)
+    print(f"fedlama     : {fedlama_rate:8.1f} rounds/s "
+          f"({1e3/fedlama_rate:6.2f} ms/round; scan engine + cross-round "
+          f"state carry)", file=out)
     print(f"speedup     : {speedup:.2f}x  (shared-memory CPU; every "
           f"host<->device crossing the engine removes is far costlier on "
           f"accelerator hosts)", file=out)
     return {"mode": mode, "host_rate": host_rate, "scan_rate": scan_rate,
-            "speedup": speedup}
+            "fedlama_rate": fedlama_rate, "speedup": speedup}
 
 
 def equivalence_check(rounds: int = 4, out=sys.stdout) -> float:

@@ -39,6 +39,7 @@ WINDOW = 5
 TRACKED = {
     ("engine", "host_rate"): "[engine] host-loop rounds/sec",
     ("engine", "scan_rate"): "[engine] scan-engine rounds/sec",
+    ("engine", "fedlama_rate"): "[engine] fedlama (stateful) rounds/sec",
     ("engine", "speedup"): "[engine] scan-vs-host speedup",
     ("shard", "unsharded"): "[shard] unsharded rounds/sec",
     ("shard", "speedup"): "[shard] widest-mesh speedup",

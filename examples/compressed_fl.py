@@ -45,7 +45,13 @@ def main():
                   quantize_bits=args.bits, error_feedback=use_ef)
     round_fn = jax.jit(build_round_fn(loss_fn, umap, fl))
 
-    # error-feedback residuals live per client (host-side store, all N)
+    # error-feedback residuals live per client (host-side store, all N).
+    # Since the cross-round state seam, they are strategy state: the
+    # quantize wrapper declares a client entry named "residual", and a
+    # round_fn takes the ROUND-LOCAL state view — client entries hold the
+    # round's participant rows (K, ...) — returning the updated view in
+    # metrics["state"]. (The run_training* drivers do this gather/scatter
+    # for you; this example hand-rolls the loop to show the seam.)
     zero_res = jax.tree.map(lambda l: jnp.zeros_like(l, jnp.float32), params)
     residuals = {i: zero_res for i in range(n_clients)} if use_ef else None
 
@@ -61,10 +67,11 @@ def main():
         if use_ef:
             res_in = jax.tree.map(lambda *ls: jnp.stack(ls),
                                   *[residuals[int(c)] for c in clients])
-            new_p, metrics = round_fn(params, batch, sizes, key, res_in)
+            state_in = {"client": {"residual": res_in}}
+            new_p, metrics = round_fn(params, batch, sizes, key, state_in)
+            res_out = metrics["state"]["client"]["residual"]
             for i, c in enumerate(clients):
-                residuals[int(c)] = jax.tree.map(lambda l: l[i],
-                                                 metrics["residuals"])
+                residuals[int(c)] = jax.tree.map(lambda l: l[i], res_out)
         else:
             new_p, metrics = round_fn(params, batch, sizes, key)
         params = new_p

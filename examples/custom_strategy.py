@@ -16,6 +16,15 @@ layer, it samples n clients per layer with probability ∝ softmax of the
 divergence scores — same n/K uplink, but cold clients still occasionally
 contribute. (This is a demo of the plugin seam, not a claim that it beats
 FedLDF.)
+
+The second scheme, "softmax-div-annealed", demonstrates the **cross-round
+state seam**: declare per-run state once in ``init_state`` (return None —
+the default — and the engines add zero carry leaves), read it in
+``select_with_state``, advance it in ``update_state``. All three drivers
+(host vmap loop, jitted scan, mesh-sharded) thread the state for you, and
+``save_server_state``/``load_server_state`` checkpoint it alongside the
+params. Here the state is a single round counter that anneals the sampling
+temperature from exploration toward the paper's deterministic Eq. 4.
 """
 import argparse
 import functools
@@ -44,10 +53,41 @@ class SoftmaxDivergence(FLStrategy):
         # Gumbel-top-n per unit = sampling n clients without replacement
         # with probability ∝ softmax(divs / T). Every op is jit-safe and
         # deterministic in `key`, so all engines (vmap/scan/mesh) agree.
+        return self._select_at_temperature(divs, key, n, self.TEMPERATURE)
+
+    @staticmethod
+    def _select_at_temperature(divs, key, n, temperature):
         gumbel = -jnp.log(-jnp.log(
             jax.random.uniform(key, divs.shape, minval=1e-9, maxval=1.0)))
-        scores = divs / self.TEMPERATURE + gumbel
+        scores = divs / temperature + gumbel
         return topn_divergence(scores, n)
+
+
+@register_strategy("softmax-div-annealed")
+class AnnealedSoftmaxDivergence(SoftmaxDivergence):
+    """Stateful variant: a cross-round counter anneals the temperature, so
+    early rounds explore (≈ uniform sampling) and late rounds converge on
+    the paper's deterministic top-n. The three hooks below are the entire
+    stateful surface — every engine threads the state automatically."""
+
+    ANNEAL = 1.5   # temperature multiplier per round (T grows ⇒ sharper)
+
+    def init_state(self, params, num_clients, mesh=None):
+        # "global" entries are replicated trees updated wholesale each
+        # round; "client" entries (not needed here) carry a leading
+        # (num_clients,) axis and get per-participant row gather/scatter.
+        return {"global": {"round": jnp.float32(0.0)}}
+
+    def select_with_state(self, state, divs, key, k, u, n):
+        t = state["global"]["round"]
+        # sharper softmax every round: T_t = T0 / ANNEAL^t
+        temperature = self.TEMPERATURE / jnp.power(self.ANNEAL, t)
+        return self._select_at_temperature(divs, key, n, temperature)
+
+    def update_state(self, state, selection, divs, umap, key=None):
+        # jit-safe, shape-preserving transition — runs once per round,
+        # after aggregation, in every driver.
+        return {"global": {"round": state["global"]["round"] + 1.0}}
 
 
 def main():
@@ -77,6 +117,21 @@ def main():
     print(f"uplink {log.meter.uplink_bytes/1e6:.2f} MB over "
           f"{log.meter.rounds} rounds "
           f"({log.meter.savings_frac*100:.1f}% saved vs FedAvg)")
+
+    # --- the stateful variant: same engine, plus a cross-round carry ---
+    fl2 = FLConfig(algo="softmax-div-annealed", num_clients=10,
+                   clients_per_round=5, top_n=2, lr=0.05,
+                   batch_per_client=8)
+    p0 = cnn.init_params(jax.random.PRNGKey(0), cfg)
+    _, log2 = run_training_scan(p0, loss_fn, data, fl2,
+                                rounds=args.rounds, seed=0)
+    assert all(np.isfinite(l) for l in log2.losses)
+    # the engine hands the final strategy state back on the log
+    rounds_seen = float(log2.final_state["global"]["round"])
+    assert rounds_seen == args.rounds, rounds_seen
+    print(f"annealed variant: state counted {rounds_seen:.0f} rounds, "
+          f"uplink {log2.meter.uplink_bytes/1e6:.2f} MB "
+          f"({log2.meter.savings_frac*100:.1f}% saved vs FedAvg)")
 
 
 if __name__ == "__main__":

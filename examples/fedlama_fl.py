@@ -1,0 +1,90 @@
+"""FedLAMA: layer-wise adaptive aggregation intervals (arXiv:2110.10302).
+
+    PYTHONPATH=src python examples/fedlama_fl.py [--rounds N] [--tau T]
+        [--lam L]
+
+The first genuinely *stateful* strategy in the registry, and the proof
+workload of the cross-round state seam: FedLAMA keeps three replicated
+(U,) vectors in strategy state — per-layer-unit ``ttl`` (rounds until the
+next synchronisation), ``interval`` (τ_u ∈ {τ', λτ'}), and ``disc`` (the
+discrepancy estimate that drives the interval assignment). Low-drift
+layers are synchronised every λτ' rounds instead of every τ', so uplink
+drops well below FedAvg while high-drift layers stay fresh.
+
+This example runs the jitted scan engine on the synthetic CIFAR-10-like
+task, prints the adapted interval distribution, then checkpoints mid-run
+with ``save_server_state`` (params + strategy state in one npz) and
+resumes with ``start_round``/``server_state`` to show the continuation is
+bit-identical to the uninterrupted run.
+"""
+import argparse
+import functools
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_server_state, save_server_state
+from repro.data import FederatedData, iid_partition, make_image_dataset
+from repro.federated import FLConfig, run_training_scan
+from repro.models import cnn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--tau", type=int, default=2,
+                    help="base aggregation interval τ'")
+    ap.add_argument("--lam", type=int, default=2,
+                    help="interval stretch λ for low-discrepancy layers")
+    args = ap.parse_args()
+
+    cfg = cnn.VGGConfig().reduced()
+    train, _ = make_image_dataset(num_train=500, num_test=16, seed=0)
+    data = FederatedData(train.xs, train.ys,
+                         iid_partition(train.ys, 10, seed=0))
+    params = cnn.init_params(jax.random.PRNGKey(0), cfg)
+    loss_fn = functools.partial(lambda c, p, b: cnn.classify_loss(p, c, b),
+                                cfg)
+
+    fl = FLConfig(algo="fedlama", num_clients=10, clients_per_round=5,
+                  top_n=2, lr=0.05, batch_per_client=8,
+                  fedlama_tau=args.tau, fedlama_lam=args.lam)
+    p_full, log = run_training_scan(params, loss_fn, data, fl,
+                                    rounds=args.rounds, seed=0)
+    assert all(np.isfinite(l) for l in log.losses)
+
+    g = log.final_state["global"]
+    intervals = np.asarray(g["interval"])
+    base, long_ = float(args.tau), float(args.tau * args.lam)
+    print(f"losses: {[f'{l:.3f}' for l in log.losses]}")
+    print(f"adapted intervals: {int((intervals == base).sum())} units @ "
+          f"τ'={base:.0f}, {int((intervals == long_).sum())} units @ "
+          f"λτ'={long_:.0f}")
+    print(f"uplink {log.meter.uplink_bytes/1e6:.2f} MB over "
+          f"{log.meter.rounds} rounds "
+          f"({log.meter.savings_frac*100:.1f}% saved vs FedAvg)")
+
+    # --- checkpoint the stateful run mid-way and resume it ---
+    half = args.rounds // 2
+    p_half, l_half = run_training_scan(params, loss_fn, data, fl,
+                                       rounds=half, seed=0)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "server.npz")
+        save_server_state(path, p_half, l_half.final_state)
+        p_loaded, state_loaded = load_server_state(path)
+    p_res, _ = run_training_scan(p_loaded, loss_fn, data, fl,
+                                 rounds=args.rounds - half, seed=0,
+                                 start_round=half,
+                                 server_state=state_loaded)
+    drift = max(float(jnp.abs(a - b).max()) for a, b in
+                zip(jax.tree.leaves(p_full), jax.tree.leaves(p_res)))
+    assert drift == 0.0, f"resume drifted from uninterrupted run: {drift}"
+    print(f"save → load → resume at round {half}: bit-identical to the "
+          f"uninterrupted {args.rounds}-round run")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,6 @@
 """Checkpointing."""
-from repro.checkpoint.io import load_pytree, save_pytree
+from repro.checkpoint.io import (load_pytree, load_server_state, save_pytree,
+                                 save_server_state)
 
-__all__ = ["save_pytree", "load_pytree"]
+__all__ = ["save_pytree", "load_pytree", "save_server_state",
+           "load_server_state"]

@@ -34,6 +34,33 @@ def save_pytree(path: str, tree: Pytree) -> None:
     np.savez(path, **flat)
 
 
+def save_server_state(path: str, params: Pytree,
+                      state: Pytree | None = None) -> None:
+    """Persist an FL server snapshot: global params plus the strategy's
+    cross-round state (``TrainLog.final_state`` — the EF residual store,
+    FedLAMA's interval accumulators, any :meth:`FLStrategy.init_state`
+    schema). Stateless runs (``state=None``) save params only; the
+    round-trip is exact (same arrays back), so feeding the loaded pair
+    into ``run_training*(start_round=..., server_state=...)`` continues a
+    run bit-identically (regression-tested in tests/test_state_seam.py).
+    """
+    tree = {"params": params}
+    if state is not None:
+        tree["state"] = state
+    save_pytree(path, tree)
+
+
+def load_server_state(path: str) -> tuple[Pytree, Pytree | None]:
+    """Inverse of :func:`save_server_state` → ``(params, state)`` with
+    ``state=None`` when the snapshot was stateless."""
+    tree = load_pytree(path)
+    if "params" not in tree:
+        raise ValueError(
+            f"{path!r} is not a server-state snapshot (no 'params' root; "
+            "was it written with save_pytree instead of save_server_state?)")
+    return tree["params"], tree.get("state")
+
+
 def load_pytree(path: str) -> Pytree:
     data = np.load(path, allow_pickle=False)
     root: dict = {}

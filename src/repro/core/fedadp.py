@@ -67,6 +67,47 @@ def aggregate_fedadp(stacked_params: Pytree, global_params: Pytree,
     return jax.tree.map(combine, stacked_params, masks, global_params)
 
 
+def fedadp_psum_parts(stacked_params: Pytree, global_params: Pytree,
+                      data_sizes: jnp.ndarray,
+                      keep_frac: float) -> tuple[Pytree, Pytree]:
+    """Local halves of :func:`aggregate_fedadp` for the mesh engine's fused
+    per-round psum: masked numerators ``Σ_k θ·m·w`` and element-wise
+    denominators ``Σ_k m·w`` over this device's local client stack. Both
+    are additive over the client axis, so psum-ing the per-device partials
+    and dividing reproduces the single-device aggregation (up to fp32
+    reduction order). The denominator is a param-structured tree — the
+    engine shards it alongside the numerators on 2-D meshes."""
+    masks = jax.vmap(lambda p: neuron_masks(p, global_params, keep_frac))(
+        stacked_params)
+    w = data_sizes.astype(jnp.float32)
+
+    def wx_for(theta):
+        return w.reshape((-1,) + (1,) * (theta.ndim - 1))
+
+    numer = jax.tree.map(
+        lambda theta, m: jnp.sum(theta.astype(jnp.float32) * m
+                                 * wx_for(theta), axis=0),
+        stacked_params, masks)
+    denom = jax.tree.map(
+        lambda theta, m: jnp.sum(m * wx_for(theta), axis=0),
+        stacked_params, masks)
+    return numer, denom
+
+
+def fedadp_psum_finalize(numer: Pytree, denom: Pytree,
+                         global_params: Pytree) -> Pytree:
+    """Replicated epilogue: element-wise division with fallback to the
+    previous global value where no client uploaded an entry. Element-wise,
+    so it is shard-safe (runs on 1/M 'model'-axis slices unchanged)."""
+
+    def combine(n, d, g):
+        agg = jnp.where(d > 0, n / jnp.where(d > 0, d, 1.0),
+                        g.astype(jnp.float32))
+        return agg.astype(g.dtype)
+
+    return jax.tree.map(combine, numer, denom, global_params)
+
+
 def comm_bytes(global_params: Pytree, num_clients: int,
                keep_frac: float) -> float:
     """Modeled uplink bytes per round: kept neurons + per-neuron index

@@ -9,9 +9,10 @@ from repro.federated.sampling import (local_rows, round_keys, sample_clients,
                                       sample_clients_jax)
 from repro.federated.server import (FLConfig, TrainLog, build_round_fn,
                                     build_round_scan, build_round_vmap,
-                                    init_residual_store,
-                                    residual_store_specs, run_training,
-                                    run_training_scan)
+                                    run_training, run_training_scan)
+# the residual-store helpers moved to launch/sharding (they are state-seam
+# placement policy, not server plumbing); re-exported here for compat
+from repro.launch.sharding import init_residual_store, residual_store_specs
 from repro.federated.strategies import (FLStrategy, make_strategy,
                                         register_strategy, registered_algos,
                                         strategy_registry,

@@ -108,6 +108,8 @@ class FLConfig:
     mode: str = "vmap"             # vmap | scan
     fedadp_keep: float = 0.2       # FedADP keep fraction (equal-comm setting)
     fedlp_p: float = 0.5           # FedLP per-layer keep probability
+    fedlama_tau: int = 2           # FedLAMA base aggregation interval τ'
+    fedlama_lam: int = 2           # FedLAMA long-interval multiplier λ
     batch_per_client: int = 32
     # remat local-training steps (jax.checkpoint): caps activation memory
     # when K stacked clients run inside the scan engine
@@ -130,6 +132,10 @@ class FLConfig:
         assert 1 <= self.top_n <= self.clients_per_round
         if not 0.0 < self.fedlp_p <= 1.0:
             raise ValueError(f"fedlp_p must be in (0, 1], got {self.fedlp_p}")
+        if self.fedlama_tau < 1 or self.fedlama_lam < 1:
+            raise ValueError(
+                f"fedlama intervals must be >= 1, got tau={self.fedlama_tau}"
+                f" lam={self.fedlama_lam}")
         if self.quantize_bits and not scls.supports_quantize:
             raise ValueError(
                 f"strategy {self.algo!r} declares supports_quantize=False "
@@ -157,6 +163,98 @@ class FLConfig:
 
 
 # ======================================================================
+# Cross-round strategy state: shared plumbing
+# ======================================================================
+# Strategy state is ``{"client": {name: (N, ...) store}, "global":
+# {name: tree}}`` or None (see FLStrategy.init_state). The helpers below
+# are the *only* state plumbing the engines/drivers need — there is no
+# per-strategy special-casing here; the EF residual store is just the
+# client entry named "residual" declared by the quantize wrapper.
+_IS_SPEC = lambda x: isinstance(x, P)     # noqa: E731  (tree_map is_leaf)
+
+
+def _state_round_view(state: Optional[dict], clients) -> Optional[dict]:
+    """Round-local view of the state: client stores are replaced by the
+    participants' gathered ``(K, ...)`` rows; global entries pass through."""
+    if not state or not state.get("client"):
+        return state
+    return {**state, "client": {n_: _gather_rows(s, clients)
+                                for n_, s in state["client"].items()}}
+
+
+def _state_scatter(state: Optional[dict], new_state: dict,
+                   clients) -> Optional[dict]:
+    """Persist a round's updated state: client rows are scattered back into
+    the ``(N, ...)`` stores, global entries are replaced wholesale."""
+    if state is None:
+        return None
+    out = dict(new_state)
+    if state.get("client"):
+        out["client"] = {n_: _scatter_rows(state["client"][n_], clients, r)
+                         for n_, r in new_state["client"].items()}
+    return out
+
+
+def _state_shard_specs(state: dict, sspecs: dict, ax: Optional[str]) -> dict:
+    """shard_map in/out specs for the round-local state: client rows get a
+    leading 'clients' axis over their entry's trailing-dim specs
+    (``residual_store_specs``-style placement), global entries use their
+    specs as-is (replicated by default)."""
+    out = {}
+    if "client" in state:
+        out["client"] = {
+            n_: jax.tree.map(lambda s: P(ax, *s), sspecs["client"][n_],
+                             is_leaf=_IS_SPEC)
+            for n_ in state["client"]}
+    if "global" in state:
+        out["global"] = {n_: sspecs["global"][n_] for n_ in state["global"]}
+    return out
+
+
+def _state_model_gather(state: dict, sspecs: dict) -> dict:
+    """Inside shard_map on a 2-D mesh: reassemble full state leaves from
+    'model'-axis shards (client rows carry a leading client axis the specs
+    do not mention, hence offset=1). No-op for replicated entries."""
+    out = dict(state)
+    for kind, off in (("client", 1), ("global", 0)):
+        if state.get(kind):
+            out[kind] = {n_: tree_all_gather(e, sspecs[kind][n_],
+                                             MODEL_AXIS, offset=off)
+                         for n_, e in state[kind].items()}
+    return out
+
+
+def _state_model_slice(state: dict, sspecs: dict, m: int) -> dict:
+    """Inverse of :func:`_state_model_gather` (exact data movement)."""
+    out = dict(state)
+    for kind, off in (("client", 1), ("global", 0)):
+        if state.get(kind):
+            out[kind] = {n_: tree_shard_slice(e, sspecs[kind][n_], m,
+                                              MODEL_AXIS, offset=off)
+                         for n_, e in state[kind].items()}
+    return out
+
+
+def _place_state(state: dict, params, strategy, mesh) -> dict:
+    """Device-put a (possibly host/numpy) state onto the mesh: client
+    stores replicated over the client-id axis with 'model'-axis-sharded
+    trailing dims, global entries per their declared specs."""
+    sspecs = strategy.state_specs(params, state, mesh)
+    out = dict(state)
+    if state.get("client"):
+        out["client"] = {
+            n_: jax.device_put(e, to_named(jax.tree.map(
+                lambda s: P(None, *s), sspecs["client"][n_],
+                is_leaf=_IS_SPEC), mesh))
+            for n_, e in state["client"].items()}
+    if state.get("global"):
+        out["global"] = {
+            n_: jax.device_put(e, to_named(sspecs["global"][n_], mesh))
+            for n_, e in state["global"].items()}
+    return out
+
+
+# ======================================================================
 # Round builders
 # ======================================================================
 def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig,
@@ -180,8 +278,12 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig,
       parameter leaf. (:func:`~repro.core.aggregation.aggregate_stacked`
       with ``axis_name`` / ``round_comm(axis_name=...)`` offer the same
       reductions as standalone calls.)
-    - Error-feedback residuals stay device-local (out_spec P('clients')
-      rows); the driver's store scatter handles the store update.
+    - Strategy state (the cross-round seam): global entries enter and
+      leave replicated — selection and ``update_state`` run on identical
+      replicated inputs on every device, so the state trajectory matches
+      the unsharded engines. Client entries (e.g. the EF residual store's
+      rows) stay device-local (spec P('clients', ...) rows); the driver's
+      store scatter handles the store update.
 
     On a 2-D ('clients', 'model') mesh the round is additionally
     FSDP-sharded: parameter leaves (and EF residual rows) enter and leave
@@ -207,15 +309,14 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig,
     k = flcfg.clients_per_round
     kloc = k // d
 
-    def body(pspecs, params, batch, data_sizes, key, residuals):
+    def body(pspecs, sspecs, params, batch, data_sizes, key, state):
         # everything in here sees the LOCAL shard: kloc clients per device,
-        # and (2-D mesh) 1/M 'model'-axis blocks of each param/residual leaf
+        # and (2-D mesh) 1/M 'model'-axis blocks of each param/state leaf
         params_shard = params
         if m > 1:
             params = tree_all_gather(params, pspecs, MODEL_AXIS)
-            if residuals is not None:
-                residuals = tree_all_gather(residuals, pspecs, MODEL_AXIS,
-                                            offset=1)
+            if state is not None:
+                state = _state_model_gather(state, sspecs)
         locals_, losses = jax.vmap(local_update, in_axes=(None, 0))(
             params, batch)
 
@@ -223,27 +324,29 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig,
         if strategy.needs_divergence:
             divs_loc = jax.vmap(lambda p: umap.divergence(p, params))(locals_)
             divs = jax.lax.all_gather(divs_loc, ax, axis=0, tiled=True)
-        selection = strategy.select(divs, key, k, umap.num_units,
-                                    flcfg.top_n)               # (K, U), repl.
+        # selection is replicated: divs are all-gathered and global state
+        # entries enter replicated (client state rows are device-local and
+        # must not drive selection under a mesh — see FLStrategy docs)
+        selection = strategy.select_with_state(state, divs, key, k,
+                                               umap.num_units,
+                                               flcfg.top_n)    # (K, U), repl.
         sel_loc = local_rows(selection, ax, kloc)
 
-        metrics_extra = {}
         if strategy.transforms_upload:
+            res_rows = (state["client"]["residual"]
+                        if strategy.tracks_residuals else None)
             uploads, cand_res = jax.vmap(
                 lambda loc, res: strategy.transform_upload(
                     loc, params, umap, res),
-                in_axes=(0, 0 if residuals is not None else None),
-            )(locals_, residuals)
+                in_axes=(0, 0 if res_rows is not None else None),
+            )(locals_, res_rows)
             if strategy.tracks_residuals:
-                new_residuals = jax.vmap(
+                new_rows = jax.vmap(
                     lambda cand, old, s: strategy.update_residual(
                         cand, old, s, umap, params),
-                    in_axes=(0, 0 if residuals is not None else None, 0),
-                )(cand_res, residuals, sel_loc)
-                if m > 1:   # back to this device's 1/M store-row shard
-                    new_residuals = tree_shard_slice(
-                        new_residuals, pspecs, m, MODEL_AXIS, offset=1)
-                metrics_extra["residuals"] = new_residuals
+                    in_axes=(0, 0, 0))(cand_res, res_rows, sel_loc)
+                state = {**state, "client": {**state["client"],
+                                             "residual": new_rows}}
         else:
             uploads = locals_
 
@@ -259,9 +362,16 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig,
         # the LOCAL selection rows, so every field but savings_frac must
         # be additive over the client axis.
         parts, denom_loc = strategy.psum_parts(uploads, umap, sel_loc,
-                                               data_sizes)
+                                               data_sizes,
+                                               global_params=params)
         if m > 1:
             parts = tree_shard_slice(parts, pspecs, m, MODEL_AXIS)
+            # a param-structured denominator (element-wise aggregation,
+            # e.g. FedADP's mask counts) shards with the numerators; the
+            # Eq. 5 (U,) unit denominator stays replicated
+            if jax.tree.structure(denom_loc) == jax.tree.structure(parts):
+                denom_loc = tree_shard_slice(denom_loc, pspecs, m,
+                                             MODEL_AXIS)
         comm_loc = strategy.comm_profile(sel_loc, umap)
         comm_add = {n_: v for n_, v in comm_loc.items()
                     if n_ != "savings_frac"}   # byte counts are additive
@@ -272,27 +382,36 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig,
         comm["savings_frac"] = 1.0 - comm["uplink_total"] / \
             comm["fedavg_uplink"]
         loss = loss_sum / k
-        return new_params, {"loss": loss, "comm": comm,
-                            "selection": selection, **metrics_extra}
+        metrics = {"loss": loss, "comm": comm, "selection": selection}
+        if state is not None:
+            # replicated transition: selection/divs/global entries are
+            # identical on every device, so the new global state is too;
+            # client rows go back to this device's 1/M store-row shard
+            state = strategy.update_state(state, selection, divs, umap,
+                                          key=key)
+            if m > 1:
+                state = _state_model_slice(state, sspecs, m)
+            metrics["state"] = state
+        return new_params, metrics
 
-    ef = bool(strategy.tracks_residuals)
     out_metrics_spec = {"loss": P(), "comm": P(), "selection": P()}
 
-    def round_fn(params, batch, data_sizes, key, residuals=None):
+    def round_fn(params, batch, data_sizes, key, state=None):
         # specs are pure shape logic, computed at trace time (the drivers
         # jit round_fn, so this runs once per compiled configuration)
         pspecs = fl_param_specs(params, mesh)
-        row_specs = jax.tree.map(lambda s: P(ax, *s), pspecs,
-                                 is_leaf=lambda x: isinstance(x, P))
-        if ef:
+        if state is not None:
+            sspecs = strategy.state_specs(params, state, mesh)
+            st_specs = _state_shard_specs(state, sspecs, ax)
             sharded = shard_map_norep(
-                functools.partial(body, pspecs), mesh,
-                in_specs=(pspecs, P(ax), P(ax), P(), row_specs),
+                functools.partial(body, pspecs, sspecs), mesh,
+                in_specs=(pspecs, P(ax), P(ax), P(), st_specs),
                 out_specs=(pspecs,
-                           {**out_metrics_spec, "residuals": row_specs}))
-            return sharded(params, batch, data_sizes, key, residuals)
+                           {**out_metrics_spec, "state": st_specs}))
+            return sharded(params, batch, data_sizes, key, state)
         sharded = shard_map_norep(
-            lambda p, b, s, key_: body(pspecs, p, b, s, key_, None), mesh,
+            lambda p, b, s, key_: body(pspecs, None, p, b, s, key_, None),
+            mesh,
             in_specs=(pspecs, P(ax), P(ax), P()),
             out_specs=(pspecs, out_metrics_spec))
         return sharded(params, batch, data_sizes, key)
@@ -318,7 +437,7 @@ def build_round_vmap(loss_fn, umap: UnitMap, flcfg: FLConfig,
     k = flcfg.clients_per_round
 
     def round_fn(params: Pytree, batch: dict, data_sizes: jnp.ndarray,
-                 key: jax.Array, residuals: Pytree = None):
+                 key: jax.Array, state: Optional[dict] = None):
         locals_, losses = jax.vmap(local_update, in_axes=(None, 0))(
             params, batch)
 
@@ -328,35 +447,41 @@ def build_round_vmap(loss_fn, umap: UnitMap, flcfg: FLConfig,
         divs = None
         if strategy.needs_divergence:
             divs = jax.vmap(lambda p: umap.divergence(p, params))(locals_)
-        selection = strategy.select(divs, key, k, umap.num_units,
-                                    flcfg.top_n)
+        selection = strategy.select_with_state(state, divs, key, k,
+                                               umap.num_units, flcfg.top_n)
 
-        metrics_extra = {}
         if strategy.transforms_upload:
             # e.g. quantized deltas: the server reconstructs
             # Ĝ + dequant(Q(Δ + e)) for uploaded layers; error feedback
             # residuals update only where a layer was actually uploaded
-            # (s[k,u] = 1).
+            # (s[k,u] = 1). The residual rows ride the state seam as the
+            # client entry named "residual" (see FLStrategy.init_state).
+            res_rows = (state["client"]["residual"]
+                        if strategy.tracks_residuals else None)
             uploads, cand_res = jax.vmap(
                 lambda loc, res: strategy.transform_upload(
                     loc, params, umap, res),
-                in_axes=(0, 0 if residuals is not None else None),
-            )(locals_, residuals)
+                in_axes=(0, 0 if res_rows is not None else None),
+            )(locals_, res_rows)
             if strategy.tracks_residuals:
-                new_residuals = jax.vmap(
+                new_rows = jax.vmap(
                     lambda cand, old, s: strategy.update_residual(
                         cand, old, s, umap, params),
-                    in_axes=(0, 0 if residuals is not None else None, 0),
-                )(cand_res, residuals, selection)
-                metrics_extra["residuals"] = new_residuals
+                    in_axes=(0, 0, 0))(cand_res, res_rows, selection)
+                state = {**state, "client": {**state["client"],
+                                             "residual": new_rows}}
         else:
             uploads = locals_
 
         new_params = strategy.aggregate(uploads, umap, selection,
                                         data_sizes, params)
         comm = strategy.comm_profile(selection, umap)
-        return new_params, {"loss": losses.mean(), "comm": comm,
-                            "selection": selection, **metrics_extra}
+        metrics = {"loss": losses.mean(), "comm": comm,
+                   "selection": selection}
+        if state is not None:
+            metrics["state"] = strategy.update_state(state, selection, divs,
+                                                     umap, key=key)
+        return new_params, metrics
 
     return round_fn
 
@@ -387,7 +512,7 @@ def build_round_scan(loss_fn, umap: UnitMap, flcfg: FLConfig,
     k = flcfg.clients_per_round
 
     def round_fn(params: Pytree, batch: dict, data_sizes: jnp.ndarray,
-                 key: jax.Array, residuals: Pytree = None):
+                 key: jax.Array, state: Optional[dict] = None):
         # ---- phase 1: divergence feedback (only if the policy needs it)
         if strategy.needs_divergence:
             def phase1(carry, batch_k):
@@ -398,8 +523,8 @@ def build_round_scan(loss_fn, umap: UnitMap, flcfg: FLConfig,
         else:
             divs, losses1 = None, None
 
-        selection = strategy.select(divs, key, k, umap.num_units,
-                                    flcfg.top_n)
+        selection = strategy.select_with_state(state, divs, key, k,
+                                               umap.num_units, flcfg.top_n)
 
         if strategy.eq5_weighted:
             w, denom = agg.unit_weights(selection, data_sizes)
@@ -427,8 +552,11 @@ def build_round_scan(loss_fn, umap: UnitMap, flcfg: FLConfig,
 
         comm = strategy.comm_profile(selection, umap)
         loss = (losses1 if losses1 is not None else losses2).mean()
-        return new_params, {"loss": loss, "comm": comm,
-                            "selection": selection}
+        metrics = {"loss": loss, "comm": comm, "selection": selection}
+        if state is not None:
+            metrics["state"] = strategy.update_state(state, selection, divs,
+                                                     umap, key=key)
+        return new_params, metrics
 
     return round_fn
 
@@ -491,42 +619,11 @@ class TrainLog:
     uplink_mb: list = dataclasses.field(default_factory=list)
     meter: comm_mod.CommMeter = dataclasses.field(
         default_factory=comm_mod.CommMeter)
-
-
-def init_residual_store(params: Pytree, num_clients: int,
-                        mesh=None) -> Pytree:
-    """Per-client error-feedback residual store: every leaf gets a leading
-    ``(N,)`` client axis, zero-initialised **in the leaf's own dtype** (a
-    hard-coded float32 store silently upcast EF arithmetic — and doubled
-    the store's memory — for bf16/fp16 models). Rows for the round's
-    participants are gathered before the round and scattered back after —
-    residuals belong to *clients*, not to sampling slots. At N × model
-    size this store is the first memory cliff; under a 2-D
-    ('clients', 'model') mesh pass ``mesh`` so it is held 'model'-axis
-    sharded (:func:`residual_store_specs`), 1/M per device — and *created*
-    sharded: the zeros are jitted with sharded out_shardings, so the full
-    replicated store never materialises on any single device (allocating
-    it first and resharding after would reintroduce, at init time, exactly
-    the cliff the sharding removes)."""
-    def build():
-        return jax.tree.map(
-            lambda l: jnp.zeros((num_clients,) + l.shape, l.dtype), params)
-
-    if mesh is None:
-        return build()
-    shardings = to_named(residual_store_specs(params, mesh), mesh)
-    return jax.jit(build, out_shardings=shardings)()
-
-
-def residual_store_specs(params: Pytree, mesh) -> Pytree:
-    """PartitionSpecs for the ``(N, ...)`` residual store: the client-id
-    axis is replicated (any client can be sampled onto any device), while
-    each leaf's trailing dims carry the same 'model'-axis sharding as the
-    corresponding parameter leaf (:func:`fl_param_specs`). All-replicated
-    on meshes without a 'model' axis."""
-    pspecs = fl_param_specs(params, mesh)
-    return jax.tree.map(lambda s: P(None, *s), pspecs,
-                        is_leaf=lambda x: isinstance(x, P))
+    # strategy state after the last round (None for stateless strategies);
+    # feed it back as run_training*(server_state=...) with
+    # start_round=<rounds done> to continue a run bit-identically
+    # (checkpoint via repro.checkpoint.save_server_state)
+    final_state: Optional[dict] = None
 
 
 def _gather_rows(store: Pytree, clients: jnp.ndarray) -> Pytree:
@@ -547,7 +644,10 @@ def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
                  rounds: int, eval_fn: Optional[Callable[[Pytree], float]] = None,
                  eval_every: int = 10, seed: int = 0,
                  verbose: bool = False,
-                 sampler: str = "host") -> tuple[Pytree, TrainLog]:
+                 sampler: str = "host",
+                 start_round: int = 0,
+                 server_state: Optional[dict] = None
+                 ) -> tuple[Pytree, TrainLog]:
     """Full FL training loop (paper Algorithm 1 ServerExecute), host-driven.
 
     One Python iteration per round — the reference oracle for
@@ -559,12 +659,19 @@ def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
       :func:`sample_clients_jax` + :meth:`ClientShards.gather`), so a fixed
       seed yields the *same trajectory* as ``run_training_scan``.
 
-    Error-feedback residuals (``flcfg.error_feedback``) are threaded through
-    rounds via a per-client store (previously they were computed and
-    dropped, making EF a silent no-op).
+    Strategy cross-round state (the EF residual store, FedLAMA's interval
+    accumulators, any :meth:`FLStrategy.init_state` schema) is threaded
+    through rounds generically: client-entry rows are gathered/scattered
+    per round, the final state lands in ``log.final_state``. To resume a
+    checkpointed run, pass ``start_round=<rounds already done>`` and
+    ``server_state=<saved state>`` — with ``sampler="jax"`` the per-round
+    keys are a pure function of (seed, absolute round index), so the
+    continuation is bit-identical to the uninterrupted run (the "host"
+    sampler's sequential numpy stream is not resumable).
     """
     assert sampler in ("host", "jax"), sampler
     umap = UnitMap.build(params)
+    strategy = make_strategy(flcfg)
     round_fn = _cached("round", loss_fn, umap, flcfg,
                        lambda: jax.jit(build_round_fn(loss_fn, umap, flcfg)))
     log = TrainLog()
@@ -574,8 +681,14 @@ def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
         # and (2-D mesh) FSDP-sharded 1/M per device along the 'model' axis
         params = jax.device_put(
             params, to_named(fl_param_specs(params, flcfg.mesh), flcfg.mesh))
-    residuals = (init_residual_store(params, flcfg.num_clients, flcfg.mesh)
-                 if flcfg.error_feedback else None)
+    if server_state is not None:
+        # checkpoint-loaded states arrive as numpy; the row scatter below
+        # needs jax arrays (and a mesh needs explicit placement)
+        state = (_place_state(server_state, params, strategy, flcfg.mesh)
+                 if flcfg.mesh is not None
+                 else jax.tree.map(jnp.asarray, server_state))
+    else:
+        state = strategy.init_state(params, flcfg.num_clients, flcfg.mesh)
     if sampler == "jax":
         shards = (fldata if isinstance(fldata, ClientShards)
                   else ClientShards.from_federated(fldata))
@@ -592,7 +705,7 @@ def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
         # round keys once t crossed the stride.)
         host_base = jax.random.PRNGKey(seed)
 
-    for t in range(rounds):
+    for t in range(start_round, start_round + rounds):
         if sampler == "jax":
             ck, bk, key = round_keys(base_key, t)
             clients = sample_clients_jax(ck, flcfg.num_clients,
@@ -607,18 +720,18 @@ def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
             sizes = jnp.asarray(all_sizes[clients])
             key = jax.random.fold_in(host_base, t)
             clients = jnp.asarray(clients)
-        if residuals is not None:
-            res_rows = _gather_rows(residuals, clients)
-            params, metrics = round_fn(params, batch, sizes, key, res_rows)
-            residuals = _scatter_rows(residuals, clients,
-                                      metrics["residuals"])
+        if state is not None:
+            st_rows = _state_round_view(state, clients)
+            params, metrics = round_fn(params, batch, sizes, key, st_rows)
+            state = _state_scatter(state, metrics["state"], clients)
         else:
             params, metrics = round_fn(params, batch, sizes, key)
         log.meter.update(metrics["comm"])
         log.rounds.append(t)
         log.losses.append(float(metrics["loss"]))
         log.uplink_mb.append(log.meter.uplink_bytes / 1e6)
-        if eval_fn is not None and (t % eval_every == 0 or t == rounds - 1):
+        if eval_fn is not None and (t % eval_every == 0
+                                    or t == start_round + rounds - 1):
             err = float(eval_fn(params))
             log.test_errors.append((t, err, log.meter.uplink_bytes))
             if verbose:
@@ -626,6 +739,7 @@ def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
                       f"test_err {err:.4f} uplink {log.meter.uplink_bytes/1e6:.1f}MB")
         elif verbose and t % 10 == 0:
             print(f"round {t:4d} loss {metrics['loss']:.4f}")
+    log.final_state = state
     return params, log
 
 
@@ -646,24 +760,42 @@ def _build_block_fn(loss_fn, umap: UnitMap, flcfg: FLConfig):
     """Compiled multi-round block: ``lax.scan`` of the round function.
 
     ``run_block(carry, shards, all_sizes, base_key, t0, num)`` advances the
-    carry (params, residual store, comm accumulator) by ``num`` rounds
+    carry (params, strategy state, comm accumulator) by ``num`` rounds
     starting at round index ``t0``, entirely on device. ``t0`` is a traced
-    scalar so eval blocks of equal length share one executable.
+    scalar so eval blocks of equal length share one executable. A
+    stateless strategy carries ``None`` — zero extra carry leaves.
     """
     round_fn = build_round_fn(loss_fn, umap, flcfg)
-    ef = flcfg.error_feedback
+    strategy = make_strategy(flcfg)
     mesh = flcfg.mesh
-    # sharded engine: pin the gathered round batch (and EF rows) to the
-    # 'clients' axis so XLA partitions the gather itself — each device
-    # materialises only its own K/D clients' samples, never the full batch.
-    # EF rows additionally keep their leaves' 'model'-axis sharding, and
-    # the scattered store is pinned back to its (replicated-N, 'model')
-    # layout so the scan carry's sharding stays fixed across rounds.
+    # sharded engine: pin the gathered round batch (and client-state rows)
+    # to the 'clients' axis so XLA partitions the gather itself — each
+    # device materialises only its own K/D clients' samples, never the
+    # full batch. Client-state rows additionally keep their leaves'
+    # 'model'-axis sharding, and the scattered store is pinned back to its
+    # (replicated-N, 'model') layout so the scan carry's sharding stays
+    # fixed across rounds.
     client_spec = (NamedSharding(mesh, P(CLIENT_AXIS))
                    if mesh is not None else None)
 
+    def constrain_state(st, params, *, rows: bool):
+        """Pin a round-local state view (rows=True) or the full store
+        (rows=False) to its mesh layout; no-op off-mesh / stateless."""
+        if mesh is None or st is None or not st.get("client"):
+            return st
+        sspecs = strategy.state_specs(params, st, mesh)
+        lead = CLIENT_AXIS if rows else None
+        out = dict(st)
+        out["client"] = {
+            n_: jax.lax.with_sharding_constraint(
+                e, jax.tree.map(
+                    lambda s: NamedSharding(mesh, P(lead, *s)),
+                    sspecs["client"][n_], is_leaf=_IS_SPEC))
+            for n_, e in st["client"].items()}
+        return out
+
     def one_round(carry, t, shards, all_sizes, base_key):
-        params, residuals, acc = carry
+        params, state, acc = carry
         ck, bk, ak = round_keys(base_key, t)
         if mesh is not None:
             # run the RNG draws replicated inside shard_map: the
@@ -682,29 +814,19 @@ def _build_block_fn(loss_fn, umap: UnitMap, flcfg: FLConfig):
         if client_spec is not None:
             batch = jax.lax.with_sharding_constraint(batch, client_spec)
             sizes = jax.lax.with_sharding_constraint(sizes, client_spec)
-        if ef:
-            res_rows = _gather_rows(residuals, clients)
-            if mesh is not None:
-                pspecs = fl_param_specs(params, mesh)
-                is_p = lambda x: isinstance(x, P)
-                res_rows = jax.lax.with_sharding_constraint(
-                    res_rows, jax.tree.map(
-                        lambda s: NamedSharding(mesh, P(CLIENT_AXIS, *s)),
-                        pspecs, is_leaf=is_p))
-            params, metrics = round_fn(params, batch, sizes, ak, res_rows)
-            residuals = _scatter_rows(residuals, clients,
-                                      metrics.pop("residuals"))
-            if mesh is not None:
-                residuals = jax.lax.with_sharding_constraint(
-                    residuals, jax.tree.map(
-                        lambda s: NamedSharding(mesh, P(None, *s)),
-                        pspecs, is_leaf=is_p))
+        if state is not None:
+            st_rows = constrain_state(_state_round_view(state, clients),
+                                      params, rows=True)
+            params, metrics = round_fn(params, batch, sizes, ak, st_rows)
+            state = constrain_state(
+                _state_scatter(state, metrics.pop("state"), clients),
+                params, rows=False)
         else:
             params, metrics = round_fn(params, batch, sizes, ak)
         acc = comm_mod.comm_acc_update(acc, metrics["comm"])
         per_round = {"loss": metrics["loss"],
                      "uplink_bytes": acc["uplink_bytes"]}
-        return (params, residuals, acc), per_round
+        return (params, state, acc), per_round
 
     # carry buffers are donated so XLA reuses them across eval blocks; on
     # CPU donation is a no-op warning, so only request it where it works.
@@ -724,25 +846,35 @@ def run_training_scan(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
                       rounds: int,
                       eval_fn: Optional[Callable[[Pytree], float]] = None,
                       eval_every: int = 10, seed: int = 0,
-                      verbose: bool = False) -> tuple[Pytree, TrainLog]:
+                      verbose: bool = False,
+                      start_round: int = 0,
+                      server_state: Optional[dict] = None
+                      ) -> tuple[Pytree, TrainLog]:
     """Device-resident FL training: ``jax.lax.scan`` over rounds.
 
     The whole schedule — client sampling (``jax.random.choice``), round-batch
     gathering from device-resident shards, local training, selection,
-    aggregation, communication accounting, and error-feedback residual
-    updates — runs inside one jitted scan per eval block, with the carry
-    (params, residual store, comm accumulator) donated between blocks.
-    Host↔device traffic is one stacked (losses, uplink) pull per block
-    instead of several scalar syncs per round.
+    aggregation, communication accounting, and strategy cross-round state
+    updates (EF residuals, FedLAMA intervals, …) — runs inside one jitted
+    scan per eval block, with the carry (params, strategy state, comm
+    accumulator) donated between blocks. Host↔device traffic is one
+    stacked (losses, uplink) pull per block instead of several scalar
+    syncs per round.
 
     ``fldata`` may be a :class:`~repro.data.FederatedData` (uploaded once)
     or a prebuilt :class:`~repro.data.ClientShards`. Same seed ⇒ same
     trajectory as ``run_training(sampler="jax")`` (fp32 tolerance).
+
+    Resume: the per-round keys are ``fold_in(PRNGKey(seed), t)`` with
+    ``t`` the *absolute* round index, so
+    ``start_round=<rounds done>, server_state=<log.final_state or a loaded
+    checkpoint>`` continues a run bit-identically to one that never
+    stopped (regression-tested in tests/test_state_seam.py).
     """
     umap = UnitMap.build(params)
     shards = (fldata if isinstance(fldata, ClientShards)
               else ClientShards.from_federated(fldata))
-    ef = flcfg.error_feedback
+    strategy = make_strategy(flcfg)
     run_block = _cached("block", loss_fn, umap, flcfg,
                         lambda: _build_block_fn(loss_fn, umap, flcfg))
     if flcfg.mesh is not None:
@@ -752,11 +884,14 @@ def run_training_scan(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
         shards = shards.place(flcfg.mesh)
     if jax.default_backend() in ("tpu", "gpu"):
         # run_block donates its carry; copy once so the caller's param
-        # buffers survive the first block (residuals/acc are fresh).
+        # buffers survive the first block (state/acc are fresh).
         params = jax.tree.map(jnp.copy, params)
-    residuals0 = (init_residual_store(params, flcfg.num_clients, flcfg.mesh)
-                  if ef else None)
-    carry = (params, residuals0, comm_mod.comm_acc_init())
+    if server_state is not None:
+        state0 = (_place_state(server_state, params, strategy, flcfg.mesh)
+                  if flcfg.mesh is not None else server_state)
+    else:
+        state0 = strategy.init_state(params, flcfg.num_clients, flcfg.mesh)
+    carry = (params, state0, comm_mod.comm_acc_init())
     all_sizes = shards.data_sizes()
     base_key = jax.random.PRNGKey(seed)
     log = TrainLog()
@@ -764,10 +899,10 @@ def run_training_scan(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
     for cut in _eval_cuts(rounds, eval_every, eval_fn is not None):
         num = cut - t0
         carry, per_round = run_block(carry, shards, all_sizes, base_key,
-                                     jnp.int32(t0), num)
+                                     jnp.int32(start_round + t0), num)
         losses = np.asarray(per_round["loss"])
         uplink = np.asarray(per_round["uplink_bytes"])
-        log.rounds.extend(range(t0, cut))
+        log.rounds.extend(range(start_round + t0, start_round + cut))
         log.losses.extend(float(l) for l in losses)
         log.uplink_mb.extend(float(u) / 1e6 for u in uplink)
         if eval_fn is not None:
@@ -779,6 +914,7 @@ def run_training_scan(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
         elif verbose:
             print(f"round {cut-1:4d} loss {losses[-1]:.4f}")
         t0 = cut
-    params, _, acc = carry
+    params, final_state, acc = carry
     log.meter = comm_mod.CommMeter.from_accumulator(acc)
+    log.final_state = final_state
     return params, log

@@ -22,6 +22,7 @@ from repro.federated.strategies.base import (FLStrategy, get_strategy_cls,
                                              strategy_registry,
                                              unregister_strategy)
 from repro.federated.strategies import builtin  # noqa: F401  (registers)
+from repro.federated.strategies import fedlama  # noqa: F401  (registers)
 from repro.federated.strategies.compression import QuantizedUpload
 
 __all__ = ["FLStrategy", "QuantizedUpload", "get_strategy_cls",

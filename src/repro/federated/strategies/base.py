@@ -41,6 +41,42 @@ flow on traced values, no host callbacks, static shapes only):
   additive across devices (the engine psums them and recomputes
   ``savings_frac``).
 
+**Cross-round state seam** (optional; all three engines thread it):
+
+- ``init_state(params, num_clients, mesh=None) -> state | None`` — declare
+  cross-round state once before round 0. ``None`` (the default) keeps the
+  strategy stateless and adds **zero** carry leaves to the engines. A
+  stateful strategy returns ``{"client": {name: store}, "global":
+  {name: tree}}``: each *client* entry is a per-client store whose leaves
+  carry a leading ``(num_clients,)`` axis (rows for the round's
+  participants are gathered before the round and scattered back after —
+  exactly the error-feedback residual treatment, which is itself declared
+  through this hook by the quantize wrapper); each *global* entry is a
+  replicated pytree updated wholesale every round.
+- ``select_with_state(state, divs, key, k, u, n)`` — state-aware selection;
+  the engines always call this, and the default delegates to ``select``
+  (so existing strategies are untouched). ``state`` is the *round-local*
+  view: client entries hold the participants' ``(K, ...)`` rows.
+- ``update_state(state, selection, divs, umap, key=None) -> state`` — the
+  per-round state transition, called once per round after aggregation with
+  the same replicated ``selection``/``divs`` every engine computed.
+  Default: identity. Must be jit-safe and shape-preserving (the scan
+  engine carries state through ``lax.scan``; changing a leaf's
+  shape/dtype across rounds will fail to trace).
+- ``state_specs(params, state, mesh) -> specs`` — mesh placement for state
+  entries on a 2-D ('clients', 'model') mesh, mirroring
+  ``residual_store_specs``: a same-structure dict of PartitionSpec trees
+  for each entry's *trailing* dims (no client axis — the engine prepends
+  the 'clients' axis for client rows itself). The default shards any
+  param-shaped client entry like the parameters (``fl_param_specs``) and
+  replicates everything else, which is right for residual/control-variate
+  stores and for small global vectors alike.
+
+In the mesh engine, global entries are replicated and may drive selection;
+client entries enter hooks as the device-local rows (like EF residual
+rows), so ``select_with_state``/``update_state`` must touch client entries
+only element-wise per-row when ``supports_mesh`` is declared.
+
 Capability flags (class attributes, read by ``FLConfig`` validation and
 the engines):
 
@@ -69,7 +105,9 @@ from __future__ import annotations
 
 from typing import Any, Optional
 
+import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core import aggregation as agg
 from repro.core import comm as comm_mod
@@ -96,6 +134,49 @@ class FLStrategy:
     def __init__(self, cfg):
         self.cfg = cfg   # the FLConfig (duck-typed; strategies read knobs)
 
+    # ---- cross-round state seam (see module docstring) ----
+    def init_state(self, params: Pytree, num_clients: int,
+                   mesh=None) -> Optional[dict]:
+        """Declare cross-round state; ``None`` (default) = stateless, and
+        the engines add no carry leaves at all."""
+        return None
+
+    def state_specs(self, params: Pytree, state: dict, mesh) -> dict:
+        """Mesh placement of state entries: a same-structure dict of
+        PartitionSpec trees for each entry's *trailing* dims. Default:
+        param-shaped client entries inherit the parameters' 'model'-axis
+        sharding (``fl_param_specs`` — the residual-store treatment),
+        everything else is replicated."""
+        from repro.launch.sharding import fl_param_specs
+        pspecs = fl_param_specs(params, mesh)
+        pdef = jax.tree.structure(params)
+        pshapes = [l.shape for l in jax.tree.leaves(params)]
+
+        def entry_specs(entry, client: bool):
+            if client and jax.tree.structure(entry) == pdef and \
+                    [l.shape[1:] for l in jax.tree.leaves(entry)] == pshapes:
+                return pspecs
+            return jax.tree.map(lambda _: P(), entry)
+
+        return {kind: {name: entry_specs(e, kind == "client")
+                       for name, e in (state.get(kind) or {}).items()}
+                for kind in ("client", "global")}
+
+    def select_with_state(self, state: Optional[dict],
+                          divs: Optional[jnp.ndarray], key, k: int, u: int,
+                          n: int) -> jnp.ndarray:
+        """State-aware selection — the engines' actual entry point. The
+        default ignores ``state`` and delegates to :meth:`select`."""
+        return self.select(divs, key, k, u, n)
+
+    def update_state(self, state: dict, selection: jnp.ndarray,
+                     divs: Optional[jnp.ndarray], umap: UnitMap,
+                     key=None) -> dict:
+        """Per-round state transition (identity by default). Runs once per
+        round, after aggregation, with replicated inputs; must be jit-safe
+        and preserve every leaf's shape/dtype."""
+        return state
+
     # ------------------------------------------------------------------
     def select(self, divs: Optional[jnp.ndarray], key, k: int, u: int,
                n: int) -> jnp.ndarray:
@@ -121,8 +202,16 @@ class FLStrategy:
 
     # ---- mesh-sharded halves of aggregate() (fused-psum protocol) ----
     def psum_parts(self, uploads: Pytree, umap: UnitMap,
-                   sel_loc: jnp.ndarray, data_sizes: jnp.ndarray
-                   ) -> tuple[Pytree, jnp.ndarray]:
+                   sel_loc: jnp.ndarray, data_sizes: jnp.ndarray,
+                   global_params: Optional[Pytree] = None
+                   ) -> tuple[Pytree, Pytree]:
+        """Additive local partials for the fused per-round psum. The
+        returned ``parts`` must be param-structured; ``denom`` may be a
+        single ``(U,)`` array (Eq. 5) *or* a param-structured tree of
+        element-wise denominators (FedADP) — the engine slices a
+        param-structured denom to 'model'-axis shards alongside ``parts``.
+        ``global_params`` is the (fully gathered) global model, for
+        strategies whose partials depend on it (e.g. FedADP's masks)."""
         return agg.stacked_psum_parts(uploads, umap, sel_loc, data_sizes)
 
     def psum_finalize(self, parts: Pytree, denom: jnp.ndarray,

@@ -55,15 +55,16 @@ class HDFL(FLStrategy):
 class FedADP(FLStrategy):
     """FedADP [6]: per-client neuron-granularity pruning with element-wise
     masked aggregation — not an Eq. 5 selection scheme, so it overrides
-    :meth:`aggregate` wholesale and declares the capabilities it lacks.
-    Works in ``vmap`` mode and (since the strategy refactor) in ``scan``
-    mode, where the engine stacks the sequentially-trained locals and
-    feeds them to the same hook."""
+    :meth:`aggregate` wholesale. Works in ``vmap`` mode, in ``scan`` mode
+    (the engine stacks the sequentially-trained locals and feeds them to
+    the same hook), and client-sharded over a mesh: its masked numerators
+    ``Σ_k θ·m·w`` and element-wise denominators ``Σ_k m·w`` are additive
+    over clients, so :meth:`psum_parts`/:meth:`psum_finalize` ride the
+    engine's fused per-round psum — the denominator is a param-structured
+    tree (not the Eq. 5 ``(U,)`` vector), which the engine 'model'-axis
+    shards alongside the numerators on 2-D meshes."""
 
     eq5_weighted = False        # element-wise masks, not unit weights
-    supports_mesh = False       # cross-device psum of masked numer/denom
-    #                             is not wired up (declared, not asserted
-    #                             deep inside an engine)
     supports_quantize = False   # aggregates pruned neurons, not deltas
 
     def select(self, divs, key, k, u, n):
@@ -73,10 +74,23 @@ class FedADP(FLStrategy):
 
     def aggregate(self, uploads, umap, selection, data_sizes,
                   global_params, axis_name=None):
-        assert axis_name is None, "fedadp declares supports_mesh=False"
+        assert axis_name is None, \
+            "the mesh engine uses psum_parts/psum_finalize"
         return fedadp_mod.aggregate_fedadp(uploads, global_params,
                                            data_sizes,
                                            self.cfg.fedadp_keep)
+
+    # ---- mesh halves: per-leaf additive masked partials ----
+    def psum_parts(self, uploads, umap, sel_loc, data_sizes,
+                   global_params=None):
+        assert global_params is not None, \
+            "fedadp psum_parts needs the global model for its masks"
+        return fedadp_mod.fedadp_psum_parts(uploads, global_params,
+                                            data_sizes,
+                                            self.cfg.fedadp_keep)
+
+    def psum_finalize(self, parts, denom, umap, params_shard, fallback):
+        return fedadp_mod.fedadp_psum_finalize(parts, denom, fallback)
 
     def comm_profile(self, selection, umap, param_bytes_override=None):
         comm = comm_mod.round_comm(selection, umap,

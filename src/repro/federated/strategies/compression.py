@@ -38,6 +38,31 @@ class QuantizedUpload(FLStrategy):
         self.eq5_weighted = inner.eq5_weighted
         self.tracks_residuals = bool(cfg.error_feedback)
 
+    # ---- cross-round state: inner state + the EF residual store ----
+    def init_state(self, params, num_clients, mesh=None):
+        # the error-feedback residual store is *declared* here as the
+        # client state entry "residual" — the engines thread it like any
+        # other strategy state (no special-cased plumbing in server.py)
+        state = self.inner.init_state(params, num_clients, mesh)
+        if self.tracks_residuals:
+            from repro.launch.sharding import init_residual_store
+            state = dict(state or {})
+            client = dict(state.get("client") or {})
+            client["residual"] = init_residual_store(params, num_clients,
+                                                     mesh)
+            state["client"] = client
+        return state
+
+    def select_with_state(self, state, divs, key, k, u, n):
+        return self.inner.select_with_state(state, divs, key, k, u, n)
+
+    def update_state(self, state, selection, divs, umap, key=None):
+        # the engine already advanced the "residual" rows via
+        # update_residual; the inner strategy's transition must preserve
+        # entries it does not own (the default identity does)
+        return self.inner.update_state(state, selection, divs, umap,
+                                       key=key)
+
     # ---- delegated hooks ----
     def select(self, divs, key, k, u, n):
         return self.inner.select(divs, key, k, u, n)
@@ -47,8 +72,10 @@ class QuantizedUpload(FLStrategy):
         return self.inner.aggregate(uploads, umap, selection, data_sizes,
                                     global_params, axis_name=axis_name)
 
-    def psum_parts(self, uploads, umap, sel_loc, data_sizes):
-        return self.inner.psum_parts(uploads, umap, sel_loc, data_sizes)
+    def psum_parts(self, uploads, umap, sel_loc, data_sizes,
+                   global_params=None):
+        return self.inner.psum_parts(uploads, umap, sel_loc, data_sizes,
+                                     global_params=global_params)
 
     def psum_finalize(self, parts, denom, umap, params_shard, fallback):
         return self.inner.psum_finalize(parts, denom, umap, params_shard,

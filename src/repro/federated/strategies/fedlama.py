@@ -1,0 +1,130 @@
+"""FedLAMA: layer-wise adaptive aggregation intervals (arXiv:2110.10302).
+
+Lee et al. observe that the layers of a federated model drift from the
+global model at very different rates, and that most of the communication
+budget is spent re-synchronising layers that have barely moved. FedLAMA
+therefore aggregates each layer on its *own* interval: layers whose
+accumulated discrepancy-per-byte is low are synchronised every
+``λ·τ'`` rounds instead of every ``τ'`` rounds (``FLConfig.fedlama_tau``
+= τ', ``FLConfig.fedlama_lam`` = λ).
+
+This is the first genuinely *stateful* strategy in the registry — it is
+the proof workload of the cross-round state seam
+(:meth:`FLStrategy.init_state` / :meth:`select_with_state` /
+:meth:`update_state`). The state is three replicated ``(U,)`` vectors:
+
+- ``ttl``       — rounds until each unit's next synchronisation (a unit is
+  aggregated exactly when its ttl reaches 0; initialised to 0 so round 0
+  is a full synchronisation that bootstraps the discrepancy estimate);
+- ``interval``  — each unit's current aggregation interval
+  τ_u ∈ {τ', λτ'};
+- ``disc``      — the discrepancy estimate d_u refreshed at each unit's
+  sync rounds from the engine's Eq. 3 divergence matrix
+  (``d_u = mean_k ||θ_u^k − θ_u||``, exactly the per-layer model
+  discrepancy of the paper's §III).
+
+Interval assignment (the paper's Alg. 2 cutoff, in our unit vocabulary):
+sort units by discrepancy-per-byte ``δ_u = d_u / z_u`` ascending and find
+the cutoff ``j*`` where the cumulative discrepancy fraction ``ℓ_j``
+balances the *remaining* cumulative size fraction ``1 − s_j`` — units
+below the cutoff carry a lot of bytes but little drift, so they are
+demoted to the long interval λτ'; units above keep the base interval τ'.
+Everything is jit-safe (sort/cumsum/argmin on static ``(U,)`` shapes), so
+the same selection trajectory falls out of the vmap, scan, and
+mesh-sharded engines.
+
+Simulation semantics: our engine models cross-device FL (clients are
+re-initialised from the global model each round), so a layer that is not
+synchronised this round simply keeps its previous global value (the
+Eq. 5 zero-denominator fallback) and that round's local update to it is
+discarded — uplink drops to ~``z·Σ_u 1/τ_u`` of FedAvg while the
+high-drift layers still synchronise every τ' rounds.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.units import UnitMap
+from repro.federated.strategies.base import FLStrategy, register_strategy
+
+
+@register_strategy("fedlama")
+class FedLAMA(FLStrategy):
+    """Layer-wise adaptive aggregation intervals, driven by per-layer
+    discrepancy accumulated across rounds in strategy state."""
+
+    needs_divergence = True   # d_u comes from the engine's Eq. 3 matrix
+
+    # ------------------------------------------------------------------
+    def init_state(self, params, num_clients, mesh=None):
+        u = UnitMap.build(params).num_units
+        tau = float(self.cfg.fedlama_tau)
+        return {"global": {
+            "ttl": jnp.zeros((u,), jnp.float32),        # round 0: full sync
+            "interval": jnp.full((u,), tau, jnp.float32),
+            "disc": jnp.zeros((u,), jnp.float32),
+        }}
+
+    # ------------------------------------------------------------------
+    def select(self, divs, key, k, u, n):
+        raise NotImplementedError(
+            "fedlama selection is interval state-driven; the engines call "
+            "select_with_state (see the cross-round state seam in "
+            "repro.federated.strategies.base)")
+
+    def select_with_state(self, state, divs, key, k, u, n):
+        # a unit is uploaded (by every participating client) exactly when
+        # its interval expires — the selection matrix is the sync mask
+        # broadcast over clients.
+        sync = (state["global"]["ttl"] <= 0.0).astype(jnp.float32)   # (U,)
+        return jnp.broadcast_to(sync[None, :], (k, u))
+
+    # ------------------------------------------------------------------
+    def _intervals(self, disc: jnp.ndarray, umap: UnitMap) -> jnp.ndarray:
+        """Alg.-2 cutoff: τ_u = λτ' for low-discrepancy-per-byte units,
+        τ' for the rest. Falls back to τ' everywhere while no discrepancy
+        has been observed yet (round 0)."""
+        tau = jnp.float32(self.cfg.fedlama_tau)
+        lam = jnp.float32(self.cfg.fedlama_lam)
+        z = umap.unit_bytes_array()                       # (U,) bytes
+        delta = disc / z                                  # drift per byte
+        order = jnp.argsort(delta)                        # ascending
+        d_sorted = disc[order]
+        z_sorted = z[order]
+        total_d = jnp.sum(d_sorted)
+        ell = jnp.cumsum(d_sorted) / jnp.where(total_d > 0, total_d, 1.0)
+        s = jnp.cumsum(z_sorted) / jnp.sum(z_sorted)
+        jstar = jnp.argmin(jnp.abs(ell - (1.0 - s)))      # balance point
+        long_sorted = (jnp.arange(disc.shape[0]) <= jstar)
+        tau_sorted = jnp.where(long_sorted, lam * tau, tau)
+        inv = jnp.argsort(order)                          # unsort
+        adaptive = tau_sorted[inv]
+        return jnp.where(total_d > 0, adaptive,
+                         jnp.full_like(adaptive, tau)).astype(jnp.float32)
+
+    def update_state(self, state, selection, divs, umap, key=None):
+        g = state["global"]
+        sync = g["ttl"] <= 0.0                            # (U,) bool
+        d_now = divs.mean(axis=0)                         # (U,)
+        disc = jnp.where(sync, d_now, g["disc"])
+        interval = self._intervals(disc, umap)
+        ttl = jnp.where(sync, interval - 1.0, g["ttl"] - 1.0)
+        return {**state, "global": {"ttl": ttl, "interval": interval,
+                                    "disc": disc}}
+
+
+def expected_round_bytes(umap: UnitMap, k: int, tau: int,
+                         lam: int = 2) -> dict:
+    """Modeled steady-state per-round uplink for the comm table.
+
+    Without a discrepancy trace the split between τ' and λτ' units is
+    unknown, so this brackets the average round: ``hi`` assumes every unit
+    stays on the base interval (worst case, payload = FedAvg/τ'), ``lo``
+    assumes every unit is demoted to λτ'. Both include the per-round
+    divergence-feedback vector (K·U float32 scalars) that drives the
+    interval adaptation.
+    """
+    feedback = float(k * umap.num_units * 4)
+    full = float(k * umap.total_bytes)
+    return {"hi": full / tau + feedback,
+            "lo": full / (lam * tau) + feedback}

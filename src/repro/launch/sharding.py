@@ -162,6 +162,45 @@ def fl_param_specs(params_shape: Pytree, mesh: Mesh,
                                           | set(DEFAULT_STACKED_KEYS)))
 
 
+def residual_store_specs(params_shape: Pytree, mesh: Mesh) -> Pytree:
+    """PartitionSpecs for an ``(N, ...)`` per-client store (EF residuals,
+    control variates, any strategy client-state entry): the client-id axis
+    is replicated (any client can be sampled onto any device), while each
+    leaf's trailing dims carry the same 'model'-axis sharding as the
+    corresponding parameter leaf (:func:`fl_param_specs`). All-replicated
+    on meshes without a 'model' axis."""
+    pspecs = fl_param_specs(params_shape, mesh)
+    return jax.tree.map(lambda s: P(None, *s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def init_residual_store(params: Pytree, num_clients: int,
+                        mesh: Optional[Mesh] = None) -> Pytree:
+    """Per-client error-feedback residual store: every leaf gets a leading
+    ``(N,)`` client axis, zero-initialised **in the leaf's own dtype** (a
+    hard-coded float32 store silently upcast EF arithmetic — and doubled
+    the store's memory — for bf16/fp16 models). Rows for the round's
+    participants are gathered before the round and scattered back after —
+    residuals belong to *clients*, not to sampling slots. At N × model
+    size this store is the first memory cliff; under a 2-D
+    ('clients', 'model') mesh pass ``mesh`` so it is held 'model'-axis
+    sharded (:func:`residual_store_specs`), 1/M per device — and *created*
+    sharded: the zeros are jitted with sharded out_shardings, so the full
+    replicated store never materialises on any single device (allocating
+    it first and resharding after would reintroduce, at init time, exactly
+    the cliff the sharding removes)."""
+    import jax.numpy as jnp
+
+    def build():
+        return jax.tree.map(
+            lambda l: jnp.zeros((num_clients,) + l.shape, l.dtype), params)
+
+    if mesh is None:
+        return build()
+    shardings = to_named(residual_store_specs(params, mesh), mesh)
+    return jax.jit(build, out_shardings=shardings)()
+
+
 def _model_dim(spec: P, axis_name: str) -> Optional[int]:
     for i, s in enumerate(spec):
         if s == axis_name:

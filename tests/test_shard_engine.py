@@ -73,12 +73,16 @@ def _cfg(mesh, algo="fedldf", **kw):
 
 
 # ----------------------------------------------------------------------
-@pytest.mark.parametrize("algo", ["fedldf", "fedavg", "fedlp"])
+@pytest.mark.parametrize("algo", ["fedldf", "fedavg", "fedlp", "fedadp",
+                                  "fedlama"])
 @pytest.mark.parametrize("mesh_size", needs_devices)
 def test_sharded_engine_matches_unsharded(task, algo, mesh_size):
     """Fixed seed ⇒ same trajectory across mesh sizes 1/2/4 and mesh=None,
-    for the paper algorithm (divergence all-gather + top-n), FedAvg, and
-    FedLP (replicated Bernoulli selection + additive keep-mask comm)."""
+    for the paper algorithm (divergence all-gather + top-n), FedAvg,
+    FedLP (replicated Bernoulli selection + additive keep-mask comm),
+    FedADP (per-leaf masked psum halves — the capability flipped by the
+    state-seam PR), and FedLAMA (replicated cross-round interval state
+    threaded through the shard_map carry)."""
     params, data = task
     p0, l0 = run_training_scan(params, _loss, data, _cfg(None, algo),
                                rounds=4, seed=3)
