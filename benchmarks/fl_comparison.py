@@ -7,6 +7,12 @@ Dirichlet(α=1), and emits CSV:
 
     fig,algo,round,uplink_mb,test_error
 
+Every run records a telemetry ledger (one JSONL file per (fig, algo) in
+``ledger_dir``), and both the CSV and :func:`summarize` are read back
+**from the ledger** rather than re-derived from in-memory logs — the
+comparison consumes the same artifact a monitoring/report pipeline would
+(``repro.launch.monitor`` renders the same files).
+
 Scale knobs default to a CI-friendly reduction of the paper's setup
 (N=20 clients, K=10/round, n=2 — same n/K=0.2 ratio as the paper's
 K=20/n=4); pass --paper-scale for the full §III-A configuration.
@@ -20,19 +26,24 @@ from __future__ import annotations
 
 import argparse
 import functools
+import os
 import sys
+import tempfile
 
 import jax
 import jax.numpy as jnp
 
 from repro.data import (FederatedData, dirichlet_partition, iid_partition,
                         make_image_dataset)
-from repro.federated import FLConfig, registered_algos, run_training
+from repro.federated import (FLConfig, TelemetryConfig, registered_algos,
+                             run_training)
 from repro.models import cnn
+from repro.telemetry import read_ledger, split_runs
 
 
 def run(paper_scale: bool = False, rounds: int = 40, seed: int = 0,
-        out=sys.stdout, algos: tuple[str, ...] | None = None):
+        out=sys.stdout, algos: tuple[str, ...] | None = None,
+        ledger_dir: str | None = None):
     if paper_scale:
         cfg = cnn.VGGConfig()
         n_clients, k, n = 50, 20, 4
@@ -41,6 +52,10 @@ def run(paper_scale: bool = False, rounds: int = 40, seed: int = 0,
         cfg = cnn.VGGConfig().reduced()
         n_clients, k, n = 20, 10, 2
         n_train, n_test, batch, noise = 3_000, 600, 16, 2.5
+
+    if ledger_dir is None:
+        ledger_dir = tempfile.mkdtemp(prefix="fl_comparison_ledgers_")
+    os.makedirs(ledger_dir, exist_ok=True)
 
     # noise=2.5 keeps the task unsaturated over the benchmark horizon so the
     # error-vs-communication ordering (paper Figs. 3-4) is measurable.
@@ -62,31 +77,43 @@ def run(paper_scale: bool = False, rounds: int = 40, seed: int = 0,
         parts = splitter(train.ys, n_clients, seed)
         data = FederatedData(train.xs, train.ys, parts)
         for algo in algos:
+            ledger_path = os.path.join(ledger_dir, f"{fig}_{algo}.jsonl")
+            # per-layer taps on, full (K, U) masks off: the comparison
+            # reads bytes/error curves, not per-client membership
             fl = FLConfig(algo=algo, num_clients=n_clients,
                           clients_per_round=k, top_n=n, lr=0.08,
                           mode="vmap", batch_per_client=batch,
                           fedadp_keep=n / k, fedlp_p=n / k,
-                          fedlama_tau=max(1, round(k / n)))
+                          fedlama_tau=max(1, round(k / n)),
+                          telemetry=TelemetryConfig(
+                              ledger_path=ledger_path,
+                              run_id=f"{fig}/{algo}",
+                              full_selection=False))
             params = cnn.init_params(jax.random.PRNGKey(seed), cfg)
             params, log = run_training(params, loss_fn, data, fl,
                                        rounds=rounds, eval_fn=eval_fn,
                                        eval_every=max(1, rounds // 10),
                                        seed=seed)
-            for (t, err, up) in log.test_errors:
-                print(f"{fig},{algo},{t},{up/1e6:.3f},{err:.4f}", file=out)
-            results[(fig, algo)] = log
+            # the CSV is read back from the ledger artifact, not the
+            # in-memory log — same records monitor.py renders
+            seg = split_runs(read_ledger(ledger_path))[-1]
+            for ev in seg["evals"]:
+                print(f"{fig},{algo},{ev['round']},"
+                      f"{ev['uplink_cum_bytes']/1e6:.3f},"
+                      f"{ev['test_error']:.4f}", file=out)
+            results[(fig, algo)] = {"log": log, "ledger": ledger_path}
     return results
 
 
 def summarize(results, out=sys.stdout):
     """Derived claims: savings ratio + error ordering (paper §III-B).
 
-    All columns are computed from the meter's *accumulated* byte totals,
-    never from any single round's profile scaled by the round count —
-    strategies with non-constant per-round bytes (fedlama's round-0 full
-    sync + interval-expiry schedule, fedlp's Bernoulli draws) would make
-    that extrapolation wrong. ``avg_round_mb`` is total/rounds for the
-    same reason.
+    Computed from the **ledger** round/eval records: total uplink is the
+    last round record's cumulative bytes (never one round's profile scaled
+    by the round count — strategies with non-constant per-round bytes
+    (fedlama's round-0 full sync + interval-expiry schedule, fedlp's
+    Bernoulli draws) would make that extrapolation wrong), and the
+    FedAvg reference is the sum of each round's own ``fedavg_uplink``.
     """
     print("# summary: algo, final_err, total_uplink_mb, avg_round_mb, "
           "savings_vs_fedavg", file=out)
@@ -96,14 +123,15 @@ def summarize(results, out=sys.stdout):
             algos.append(algo)
     for fig in ("fig3_iid", "fig4_noniid"):
         for algo in algos:
-            log = results[(fig, algo)]
-            err = log.test_errors[-1][1]
-            up = log.meter.uplink_bytes
-            # every meter carries its own uncompressed-FedAvg reference
-            # bytes, so the savings column survives algo subsets that
-            # omit fedavg itself (for fedavg, up == base -> 0.000)
-            base = log.meter.fedavg_uplink_bytes
-            avg = up / max(log.meter.rounds, 1)
+            seg = split_runs(read_ledger(results[(fig, algo)]["ledger"]))[-1]
+            rounds_rec, evals = seg["rounds"], seg["evals"]
+            err = evals[-1]["test_error"]
+            up = rounds_rec[-1]["uplink_cum_bytes"]
+            # every round record carries its own uncompressed-FedAvg
+            # reference bytes, so the savings column survives algo subsets
+            # that omit fedavg itself (for fedavg, up == base -> 0.000)
+            base = sum(r["comm"]["fedavg_uplink"] for r in rounds_rec)
+            avg = up / max(len(rounds_rec), 1)
             print(f"# {fig},{algo},{err:.4f},{up/1e6:.1f},{avg/1e6:.2f},"
                   f"{1 - up / base:.3f}", file=out)
 
@@ -112,6 +140,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--ledger-dir", default=None,
+                    help="directory for per-run telemetry JSONL ledgers "
+                         "(default: a fresh temp dir)")
     args = ap.parse_args()
-    res = run(paper_scale=args.paper_scale, rounds=args.rounds)
+    res = run(paper_scale=args.paper_scale, rounds=args.rounds,
+              ledger_dir=args.ledger_dir)
     summarize(res)

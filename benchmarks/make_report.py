@@ -100,6 +100,42 @@ def roofline_table(rows, out, mesh="16x16"):
               file=out)
 
 
+def telemetry_table(artifact_dir, out):
+    """§Telemetry — summarise any FL round ledgers (*.jsonl) found next to
+    the dry-run artifacts (e.g. the TELEMETRY_ci.jsonl the bench-smoke CI
+    job uploads). Reads the ledger records instead of re-deriving metrics;
+    fail-soft when no ledgers (or no repro on the path) are present."""
+    paths = sorted(glob.glob(os.path.join(artifact_dir, "*.jsonl")))
+    if not paths:
+        return
+    try:
+        from repro.telemetry import read_ledger, split_runs
+    except ImportError:
+        print("\n(telemetry ledgers present but repro not importable — "
+              "run with PYTHONPATH=src)", file=out)
+        return
+    print("\n### §Telemetry — FL round ledgers\n", file=out)
+    print("| run | algo | driver | rounds | final loss | uplink | "
+          "savings | wall/round |", file=out)
+    print("|---|---|---|---|---|---|---|---|", file=out)
+    for path in paths:
+        for seg in split_runs(read_ledger(path)):
+            meta, rounds_rec = seg["meta"] or {}, seg["rounds"]
+            if not rounds_rec:
+                continue
+            up = rounds_rec[-1]["uplink_cum_bytes"]
+            base = sum(r["comm"]["fedavg_uplink"] for r in rounds_rec)
+            walls = [r["wall_s"] for r in rounds_rec
+                     if r.get("wall_s") is not None]
+            wall = (f"{sorted(walls)[len(walls) // 2] * 1e3:.1f}ms"
+                    if walls else "-")
+            print(f"| {meta.get('run_id') or os.path.basename(path)} | "
+                  f"{meta.get('algo', '?')} | {meta.get('driver', '?')} | "
+                  f"{len(rounds_rec)} | {rounds_rec[-1]['loss']:.4f} | "
+                  f"{fmt_bytes(up)} | {1 - up / base:.3f} | {wall} |",
+                  file=out)
+
+
 def perf_table(rows, out):
     variants = [r for r in rows if r["variant"] != "baseline"]
     if not variants:
@@ -141,6 +177,7 @@ def main():
     roofline_table(rows, out, "16x16")
     roofline_table(rows, out, "2x16x16")
     perf_table(rows, out)
+    telemetry_table(artifact_dir, out)
 
 
 if __name__ == "__main__":

@@ -36,7 +36,10 @@ training must produce the same final parameters to fp32 tolerance
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import os
 import sys
+import tempfile
 import time
 
 import jax
@@ -44,7 +47,8 @@ import jax.numpy as jnp
 
 from repro.data import (ClientShards, FederatedData, iid_partition,
                         make_image_dataset)
-from repro.federated import FLConfig, run_training, run_training_scan
+from repro.federated import (FLConfig, TelemetryConfig, run_training,
+                             run_training_scan)
 from repro.models import cnn
 
 # paper §III-A protocol scale. The floor workload uses a small local batch
@@ -107,7 +111,8 @@ def _best_rate(fn, rounds: int, reps: int) -> float:
 
 
 def run(mode: str = "floor", rounds: int = 300, reps: int = 5,
-        num_train: int = 5000, out=sys.stdout) -> dict:
+        num_train: int = 5000, out=sys.stdout,
+        ledger_path: str | None = None) -> dict:
     params, loss, data, flcfg = _make_task(mode, num_train)
     rounds = max(1, rounds)
     if mode == "vgg":
@@ -131,6 +136,28 @@ def run(mode: str = "floor", rounds: int = 300, reps: int = 5,
     fedlama_rate = _best_rate(
         lambda: run_training_scan(params, loss, shards, lama_cfg,
                                   rounds=rounds, seed=0), rounds, reps)
+    # telemetry overhead: the SAME scan workload with full in-jit taps
+    # (per-layer divergence/selection vectors + full (K, U) masks) AND the
+    # JSONL round ledger enabled, so the measured rate pays both the
+    # widened stacked outputs and the host-side serialisation. The
+    # append-mode ledger is truncated before every timed rep so the kept
+    # artifact (``ledger_path``; CI uploads it next to BENCH_ci.json)
+    # holds exactly one run.
+    if ledger_path is None:
+        ledger_path = os.path.join(
+            tempfile.mkdtemp(prefix="round_engine_bench_"),
+            "TELEMETRY.jsonl")
+    tele_cfg = dataclasses.replace(
+        flcfg, telemetry=TelemetryConfig(ledger_path=ledger_path,
+                                         run_id=f"{mode}-scan-telemetry"))
+
+    def _telemetry_run():
+        open(ledger_path, "w").close()
+        run_training_scan(params, loss, shards, tele_cfg, rounds=rounds,
+                          seed=0)
+
+    telemetry_rate = _best_rate(_telemetry_run, rounds, reps)
+    telemetry_ratio = telemetry_rate / scan_rate
     speedup = scan_rate / host_rate
     print(f"workload={mode} N={N_CLIENTS} K={K} n={TOP_N} "
           f"B={BATCH_BY_MODE[mode]} rounds={rounds}", file=out)
@@ -141,11 +168,17 @@ def run(mode: str = "floor", rounds: int = 300, reps: int = 5,
     print(f"fedlama     : {fedlama_rate:8.1f} rounds/s "
           f"({1e3/fedlama_rate:6.2f} ms/round; scan engine + cross-round "
           f"state carry)", file=out)
+    print(f"telemetry   : {telemetry_rate:8.1f} rounds/s "
+          f"({1e3/telemetry_rate:6.2f} ms/round; full taps + JSONL "
+          f"ledger = {telemetry_ratio:.2f}x of plain scan)", file=out)
     print(f"speedup     : {speedup:.2f}x  (shared-memory CPU; every "
           f"host<->device crossing the engine removes is far costlier on "
           f"accelerator hosts)", file=out)
     return {"mode": mode, "host_rate": host_rate, "scan_rate": scan_rate,
-            "fedlama_rate": fedlama_rate, "speedup": speedup}
+            "fedlama_rate": fedlama_rate,
+            "telemetry_rate": telemetry_rate,
+            "telemetry_ratio": telemetry_ratio,
+            "telemetry_ledger": ledger_path, "speedup": speedup}
 
 
 def equivalence_check(rounds: int = 4, out=sys.stdout) -> float:
@@ -184,9 +217,12 @@ def main(argv=None) -> int:
     ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--num-train", type=int, default=5000)
     ap.add_argument("--skip-equivalence", action="store_true")
+    ap.add_argument("--telemetry-ledger", default=None,
+                    help="keep the telemetry run's JSONL ledger at this "
+                         "path (default: a temp file)")
     args = ap.parse_args(argv)
     run(mode=args.mode, rounds=args.rounds, reps=args.reps,
-        num_train=args.num_train)
+        num_train=args.num_train, ledger_path=args.telemetry_ledger)
     if not args.skip_equivalence:
         worst = equivalence_check()
         if worst >= EQUIV_TOL:

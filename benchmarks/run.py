@@ -35,6 +35,10 @@ def main(argv=None) -> None:
                     help="smoke shapes: tiny rounds/reps, skip fig3/4 sweep")
     ap.add_argument("--json", default=None,
                     help="write per-section results as JSON")
+    ap.add_argument("--telemetry-ledger", default=None,
+                    help="keep the [engine] telemetry run's JSONL ledger "
+                         "at this path (CI uploads it next to "
+                         "BENCH_ci.json; default: a temp file)")
     args = ap.parse_args(argv)
 
     results: dict = {"ci": args.ci}
@@ -55,7 +59,8 @@ def main(argv=None) -> None:
         print("# === [engine] host loop vs device-resident scan engine ===")
         from benchmarks import round_engine_bench
         results["engine"] = round_engine_bench.run(
-            rounds=20 if args.ci else 150, reps=1 if args.ci else 3)
+            rounds=20 if args.ci else 150, reps=1 if args.ci else 3,
+            ledger_path=args.telemetry_ledger)
         if round_engine_bench.equivalence_check() >= \
                 round_engine_bench.EQUIV_TOL:
             raise SystemExit("[engine] host-vs-scan equivalence FAILED")

@@ -40,6 +40,10 @@ TRACKED = {
     ("engine", "host_rate"): "[engine] host-loop rounds/sec",
     ("engine", "scan_rate"): "[engine] scan-engine rounds/sec",
     ("engine", "fedlama_rate"): "[engine] fedlama (stateful) rounds/sec",
+    ("engine", "telemetry_rate"): "[engine] scan + full telemetry "
+                                  "rounds/sec",
+    ("engine", "telemetry_ratio"): "[engine] telemetry-enabled/disabled "
+                                   "rate ratio",
     ("engine", "speedup"): "[engine] scan-vs-host speedup",
     ("shard", "unsharded"): "[shard] unsharded rounds/sec",
     ("shard", "speedup"): "[shard] widest-mesh speedup",

@@ -17,14 +17,17 @@ from repro.federated.strategies import (FLStrategy, make_strategy,
                                         register_strategy, registered_algos,
                                         strategy_registry,
                                         unregister_strategy)
+# observability config rides FLConfig(telemetry=...); re-exported so FL
+# callers need one import (full subsystem: repro.telemetry)
+from repro.telemetry import TelemetryConfig
 
 __all__ = ["make_local_update", "plain_sgd_client", "local_rows",
            "round_keys", "sample_clients", "sample_clients_jax", "ALGOS",
-           "FLConfig", "FLStrategy", "TrainLog", "build_round_fn",
-           "build_round_scan", "build_round_vmap", "init_residual_store",
-           "make_strategy", "register_strategy", "registered_algos",
-           "residual_store_specs", "run_training", "run_training_scan",
-           "strategy_registry", "unregister_strategy"]
+           "FLConfig", "FLStrategy", "TelemetryConfig", "TrainLog",
+           "build_round_fn", "build_round_scan", "build_round_vmap",
+           "init_residual_store", "make_strategy", "register_strategy",
+           "registered_algos", "residual_store_specs", "run_training",
+           "run_training_scan", "strategy_registry", "unregister_strategy"]
 
 
 def __getattr__(name):   # PEP 562: ALGOS tracks the live strategy registry

@@ -64,6 +64,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import time
 from typing import Any, Callable, Optional
 
 import jax
@@ -87,6 +88,9 @@ from repro.launch.sharding import (fl_param_specs, to_named,
                                    tree_all_gather, tree_shard_slice)
 from repro.optim import sgd
 from repro.optim.opt import Optimizer
+from repro.telemetry import ProgressSink, RoundLedger, TelemetryConfig
+from repro.telemetry import profiling as prof_mod
+from repro.telemetry import taps as taps_mod
 
 Pytree = Any
 
@@ -122,6 +126,11 @@ class FLConfig:
     # additionally FSDP-shards param leaves + the EF residual store 1/M per
     # device. None = single-device round, unchanged.
     mesh: Optional[Mesh] = None
+    # observability: in-jit metric taps + JSONL round ledger + profiling
+    # hooks (see repro.telemetry). None (default) is the zero-cost path:
+    # compiled rounds, scan carries, and fixed-seed trajectories are
+    # bit-identical to a config without telemetry.
+    telemetry: Optional[TelemetryConfig] = None
 
     def __post_init__(self):
         # resolve through the strategy registry: unknown algos raise a
@@ -160,6 +169,11 @@ class FLConfig:
             d = client_mesh_size(self.mesh)
             assert self.clients_per_round % d == 0, \
                 f"K={self.clients_per_round} must divide over {d} devices"
+        if self.telemetry is not None and \
+                not isinstance(self.telemetry, TelemetryConfig):
+            raise TypeError(
+                "FLConfig.telemetry must be a repro.telemetry."
+                f"TelemetryConfig or None, got {type(self.telemetry)}")
 
 
 # ======================================================================
@@ -308,6 +322,8 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig,
     m = model_mesh_size(mesh)
     k = flcfg.clients_per_round
     kloc = k // d
+    tele = flcfg.telemetry
+    taps_on = tele is not None and tele.taps
 
     def body(pspecs, sspecs, params, batch, data_sizes, key, state):
         # everything in here sees the LOCAL shard: kloc clients per device,
@@ -375,8 +391,20 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig,
         comm_loc = strategy.comm_profile(sel_loc, umap)
         comm_add = {n_: v for n_, v in comm_loc.items()
                     if n_ != "savings_frac"}   # byte counts are additive
-        (parts, denom), loss_sum, comm = jax.lax.psum(
-            ((parts, denom_loc), losses.sum(), comm_add), ax)
+        # telemetry taps: the client-state squared-norm partials (EF
+        # residual rows are device-local) ride the SAME fused psum — taps
+        # must not add a second rendezvous. Disabled telemetry keeps the
+        # original 3-tuple, so the compiled round is bit-identical.
+        tap_client_sq = None
+        if taps_on and state is not None and state.get("client"):
+            tap_client_sq = taps_mod.client_sqsums(state["client"])
+        if tap_client_sq is not None:
+            (parts, denom), loss_sum, comm, tap_client_sq = jax.lax.psum(
+                ((parts, denom_loc), losses.sum(), comm_add,
+                 tap_client_sq), ax)
+        else:
+            (parts, denom), loss_sum, comm = jax.lax.psum(
+                ((parts, denom_loc), losses.sum(), comm_add), ax)
         new_params = strategy.psum_finalize(parts, denom, umap,
                                             params_shard, params_shard)
         comm["savings_frac"] = 1.0 - comm["uplink_total"] / \
@@ -389,12 +417,23 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig,
             # client rows go back to this device's 1/M store-row shard
             state = strategy.update_state(state, selection, divs, umap,
                                           key=key)
+        if taps_on:
+            # replicated by construction: selection/divs/global state are
+            # identical everywhere, client norms were just psum'd. The
+            # non-None client_sq stops collect() from re-deriving norms
+            # from the device-local rows.
+            metrics["taps"] = taps_mod.collect(
+                strategy, state, selection, divs, umap,
+                client_sq=tap_client_sq if tap_client_sq is not None else {})
+        if state is not None:
             if m > 1:
                 state = _state_model_slice(state, sspecs, m)
             metrics["state"] = state
         return new_params, metrics
 
     out_metrics_spec = {"loss": P(), "comm": P(), "selection": P()}
+    if taps_on:
+        out_metrics_spec["taps"] = P()
 
     def round_fn(params, batch, data_sizes, key, state=None):
         # specs are pure shape logic, computed at trace time (the drivers
@@ -435,6 +474,7 @@ def build_round_vmap(loss_fn, umap: UnitMap, flcfg: FLConfig,
     if flcfg.mesh is not None:
         return _build_round_vmap_sharded(local_update, umap, flcfg, strategy)
     k = flcfg.clients_per_round
+    taps_on = flcfg.telemetry is not None and flcfg.telemetry.taps
 
     def round_fn(params: Pytree, batch: dict, data_sizes: jnp.ndarray,
                  key: jax.Array, state: Optional[dict] = None):
@@ -481,6 +521,12 @@ def build_round_vmap(loss_fn, umap: UnitMap, flcfg: FLConfig,
         if state is not None:
             metrics["state"] = strategy.update_state(state, selection, divs,
                                                      umap, key=key)
+        if taps_on:
+            # client rows in the post-update_state view carry the
+            # post-residual-update values (update_state preserves entries
+            # it does not own), matching the mesh engine's tap timing.
+            metrics["taps"] = taps_mod.collect(
+                strategy, metrics.get("state"), selection, divs, umap)
         return new_params, metrics
 
     return round_fn
@@ -510,6 +556,7 @@ def build_round_scan(loss_fn, umap: UnitMap, flcfg: FLConfig,
     local_update = make_local_update(loss_fn, opt, flcfg.local_steps,
                                      remat=flcfg.remat)
     k = flcfg.clients_per_round
+    taps_on = flcfg.telemetry is not None and flcfg.telemetry.taps
 
     def round_fn(params: Pytree, batch: dict, data_sizes: jnp.ndarray,
                  key: jax.Array, state: Optional[dict] = None):
@@ -556,6 +603,9 @@ def build_round_scan(loss_fn, umap: UnitMap, flcfg: FLConfig,
         if state is not None:
             metrics["state"] = strategy.update_state(state, selection, divs,
                                                      umap, key=key)
+        if taps_on:
+            metrics["taps"] = taps_mod.collect(
+                strategy, metrics.get("state"), selection, divs, umap)
         return new_params, metrics
 
     return round_fn
@@ -585,6 +635,18 @@ def _umap_cache_key(umap: UnitMap) -> tuple:
     return (umap.names, tuple(sorted(umap.spans.items())), umap.unit_bytes)
 
 
+def _trace_flcfg(flcfg: FLConfig) -> FLConfig:
+    """Cache-key view of the config: telemetry is reduced to its
+    trace-relevant subset (taps on/off, full-selection on/off), so two runs
+    differing only in host-side observability — ledger path, run id,
+    verbosity, profiler window — share one compiled round instead of
+    forcing a retrace."""
+    if flcfg.telemetry is None:
+        return flcfg
+    return dataclasses.replace(flcfg,
+                               telemetry=flcfg.telemetry.trace_key())
+
+
 def _cached(kind: str, loss_fn, umap: UnitMap, flcfg: FLConfig, build):
     """NOTE: keyed on ``loss_fn`` *identity* — pass a stable function (module
     function, bound method, or a lambda created once) to hit the cache;
@@ -592,18 +654,26 @@ def _cached(kind: str, loss_fn, umap: UnitMap, flcfg: FLConfig, build):
     the *class* currently registered under ``flcfg.algo``: the registry is
     mutable (unregister + re-register is the iterate-on-a-plugin flow), so
     an equal FLConfig must not reuse a round compiled for a previously
-    registered strategy class."""
-    key = (kind, loss_fn, _umap_cache_key(umap), flcfg,
+    registered strategy class.
+
+    Every lookup is reported to the telemetry retrace counters
+    (:func:`repro.telemetry.profiling.note_engine_cache`): a nonzero
+    ``<kind>_builds`` delta across identical driver calls is the retrace
+    regression tests/test_telemetry.py pins."""
+    key = (kind, loss_fn, _umap_cache_key(umap), _trace_flcfg(flcfg),
            get_strategy_cls(flcfg.algo))
     try:
         fn = _JIT_CACHE.get(key)
     except TypeError:       # unhashable loss_fn — skip caching
+        prof_mod.note_engine_cache(kind, hit=False)
         return build()
     if fn is None:
+        prof_mod.note_engine_cache(kind, hit=False)
         while len(_JIT_CACHE) >= _JIT_CACHE_MAX:
             _JIT_CACHE.popitem(last=False)
         fn = _JIT_CACHE[key] = build()
     else:
+        prof_mod.note_engine_cache(kind, hit=True)
         _JIT_CACHE.move_to_end(key)
     return fn
 
@@ -611,6 +681,25 @@ def _cached(kind: str, loss_fn, umap: UnitMap, flcfg: FLConfig, build):
 # ======================================================================
 # Multi-round drivers
 # ======================================================================
+def _run_meta(flcfg: FLConfig, *, driver: str, umap: UnitMap, seed: int,
+              sampler: str, start_round: int, rounds: int,
+              run_id: str) -> dict:
+    """Ledger run-header metadata: everything a consumer needs to label a
+    segment without rebuilding the model (notably the layer-unit names,
+    which index every per-layer tap vector)."""
+    mesh = flcfg.mesh
+    return {"run_id": run_id, "driver": driver, "algo": flcfg.algo,
+            "mode": flcfg.mode, "sampler": sampler, "seed": seed,
+            "start_round": start_round, "rounds": rounds,
+            "num_clients": flcfg.num_clients,
+            "clients_per_round": flcfg.clients_per_round,
+            "top_n": flcfg.top_n,
+            "quantize_bits": flcfg.quantize_bits,
+            "mesh": (dict(mesh.shape) if mesh is not None else None),
+            "units": list(umap.names),
+            "unit_bytes": [float(b) for b in np.asarray(umap.unit_bytes)]}
+
+
 @dataclasses.dataclass
 class TrainLog:
     rounds: list = dataclasses.field(default_factory=list)
@@ -675,6 +764,15 @@ def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
     round_fn = _cached("round", loss_fn, umap, flcfg,
                        lambda: jax.jit(build_round_fn(loss_fn, umap, flcfg)))
     log = TrainLog()
+    tele = flcfg.telemetry
+    sink = ProgressSink.for_run(tele, verbose)
+    sample_sys = tele is not None and tele.sample_system
+    win = prof_mod.ProfileWindow.from_config(tele)
+    ledger = None
+    if tele is not None and tele.wants_ledger:
+        ledger = RoundLedger(tele.ledger_path, meta=_run_meta(
+            flcfg, driver="host", umap=umap, seed=seed, sampler=sampler,
+            start_round=start_round, rounds=rounds, run_id=tele.run_id))
     if flcfg.mesh is not None:
         # place the global model over the mesh: replicated across 'clients'
         # so the sharded round starts from device-local copies everywhere,
@@ -705,40 +803,67 @@ def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
         # round keys once t crossed the stride.)
         host_base = jax.random.PRNGKey(seed)
 
-    for t in range(start_round, start_round + rounds):
-        if sampler == "jax":
-            ck, bk, key = round_keys(base_key, t)
-            clients = sample_clients_jax(ck, flcfg.num_clients,
+    try:
+        for t in range(start_round, start_round + rounds):
+            win.round_begin(t)
+            wall0 = time.perf_counter() if sample_sys else None
+            if sampler == "jax":
+                ck, bk, key = round_keys(base_key, t)
+                clients = sample_clients_jax(ck, flcfg.num_clients,
+                                             flcfg.clients_per_round)
+                batch = shards.gather(clients, flcfg.batch_per_client, bk)
+                sizes = all_sizes_dev[clients]
+            else:
+                clients = sample_clients(rng, flcfg.num_clients,
                                          flcfg.clients_per_round)
-            batch = shards.gather(clients, flcfg.batch_per_client, bk)
-            sizes = all_sizes_dev[clients]
-        else:
-            clients = sample_clients(rng, flcfg.num_clients,
-                                     flcfg.clients_per_round)
-            batch = fldata.round_batch(clients, flcfg.batch_per_client, rng)
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            sizes = jnp.asarray(all_sizes[clients])
-            key = jax.random.fold_in(host_base, t)
-            clients = jnp.asarray(clients)
-        if state is not None:
-            st_rows = _state_round_view(state, clients)
-            params, metrics = round_fn(params, batch, sizes, key, st_rows)
-            state = _state_scatter(state, metrics["state"], clients)
-        else:
-            params, metrics = round_fn(params, batch, sizes, key)
-        log.meter.update(metrics["comm"])
-        log.rounds.append(t)
-        log.losses.append(float(metrics["loss"]))
-        log.uplink_mb.append(log.meter.uplink_bytes / 1e6)
-        if eval_fn is not None and (t % eval_every == 0
-                                    or t == start_round + rounds - 1):
-            err = float(eval_fn(params))
-            log.test_errors.append((t, err, log.meter.uplink_bytes))
-            if verbose:
-                print(f"round {t:4d} loss {metrics['loss']:.4f} "
-                      f"test_err {err:.4f} uplink {log.meter.uplink_bytes/1e6:.1f}MB")
-        elif verbose and t % 10 == 0:
-            print(f"round {t:4d} loss {metrics['loss']:.4f}")
+                batch = fldata.round_batch(clients, flcfg.batch_per_client,
+                                           rng)
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                sizes = jnp.asarray(all_sizes[clients])
+                key = jax.random.fold_in(host_base, t)
+                clients = jnp.asarray(clients)
+            if state is not None:
+                st_rows = _state_round_view(state, clients)
+                params, metrics = round_fn(params, batch, sizes, key,
+                                           st_rows)
+                state = _state_scatter(state, metrics["state"], clients)
+            else:
+                params, metrics = round_fn(params, batch, sizes, key)
+            log.meter.update(metrics["comm"])
+            log.rounds.append(t)
+            loss_t = float(metrics["loss"])     # device sync
+            log.losses.append(loss_t)
+            log.uplink_mb.append(log.meter.uplink_bytes / 1e6)
+            if ledger is not None:
+                # the float() pull above synced the round, so wall_s is
+                # real compute time, not dispatch time
+                wall_s = (time.perf_counter() - wall0
+                          if wall0 is not None else None)
+                mem = (prof_mod.device_memory_peak() if sample_sys
+                       else None)
+                ledger.round(
+                    t, loss_t, jax.device_get(metrics["comm"]),
+                    log.meter.uplink_bytes,
+                    taps=(jax.device_get(metrics["taps"])
+                          if "taps" in metrics else None),
+                    selection=(metrics["selection"]
+                               if tele.full_selection else None),
+                    wall_s=wall_s, mem_peak_bytes=mem)
+            if eval_fn is not None and (t % eval_every == 0
+                                        or t == start_round + rounds - 1):
+                err = float(eval_fn(params))
+                log.test_errors.append((t, err, log.meter.uplink_bytes))
+                if ledger is not None:
+                    ledger.eval(t, err, log.meter.uplink_bytes)
+                sink.round(t, loss_t, test_error=err,
+                           uplink_bytes=log.meter.uplink_bytes)
+            elif sink.enabled and t % 10 == 0:
+                sink.round(t, loss_t)
+            win.round_end(t)
+    finally:
+        win.close()
+        if ledger is not None:
+            ledger.close()
     log.final_state = state
     return params, log
 
@@ -826,6 +951,16 @@ def _build_block_fn(loss_fn, umap: UnitMap, flcfg: FLConfig):
         acc = comm_mod.comm_acc_update(acc, metrics["comm"])
         per_round = {"loss": metrics["loss"],
                      "uplink_bytes": acc["uplink_bytes"]}
+        # telemetry widens the stacked per-round OUTPUTS (scan ys), never
+        # the carry — disabled telemetry leaves zero extra carry leaves
+        # and the per_round dict exactly as above (bit-identical blocks).
+        tele = flcfg.telemetry
+        if tele is not None:
+            per_round["comm"] = metrics["comm"]
+            if tele.taps:
+                per_round["taps"] = metrics["taps"]
+            if tele.full_selection:
+                per_round["selection"] = metrics["selection"]
         return (params, state, acc), per_round
 
     # carry buffers are donated so XLA reuses them across eval blocks; on
@@ -895,25 +1030,68 @@ def run_training_scan(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
     all_sizes = shards.data_sizes()
     base_key = jax.random.PRNGKey(seed)
     log = TrainLog()
+    tele = flcfg.telemetry
+    sink = ProgressSink.for_run(tele, verbose)
+    sample_sys = tele is not None and tele.sample_system
+    win = prof_mod.ProfileWindow.from_config(tele)
+    ledger = None
+    if tele is not None and tele.wants_ledger:
+        ledger = RoundLedger(tele.ledger_path, meta=_run_meta(
+            flcfg, driver="scan", umap=umap, seed=seed, sampler="jax",
+            start_round=start_round, rounds=rounds, run_id=tele.run_id))
     t0 = 0
-    for cut in _eval_cuts(rounds, eval_every, eval_fn is not None):
-        num = cut - t0
-        carry, per_round = run_block(carry, shards, all_sizes, base_key,
-                                     jnp.int32(start_round + t0), num)
-        losses = np.asarray(per_round["loss"])
-        uplink = np.asarray(per_round["uplink_bytes"])
-        log.rounds.extend(range(start_round + t0, start_round + cut))
-        log.losses.extend(float(l) for l in losses)
-        log.uplink_mb.extend(float(u) / 1e6 for u in uplink)
-        if eval_fn is not None:
-            err = float(eval_fn(carry[0]))
-            log.test_errors.append((cut - 1, err, float(uplink[-1])))
-            if verbose:
-                print(f"round {cut-1:4d} loss {losses[-1]:.4f} "
-                      f"test_err {err:.4f} uplink {uplink[-1]/1e6:.1f}MB")
-        elif verbose:
-            print(f"round {cut-1:4d} loss {losses[-1]:.4f}")
-        t0 = cut
+    try:
+        for cut in _eval_cuts(rounds, eval_every, eval_fn is not None):
+            num = cut - t0
+            win.block_begin(start_round + t0, start_round + cut)
+            wall0 = time.perf_counter() if sample_sys else None
+            carry, per_round = run_block(carry, shards, all_sizes, base_key,
+                                         jnp.int32(start_round + t0), num)
+            losses = np.asarray(per_round["loss"])
+            uplink = np.asarray(per_round["uplink_bytes"])
+            # the np.asarray pulls above synced the block, so block wall
+            # time is real compute; per-round wall is the amortised share
+            block_wall = (time.perf_counter() - wall0
+                          if wall0 is not None else None)
+            log.rounds.extend(range(start_round + t0, start_round + cut))
+            log.losses.extend(float(l) for l in losses)
+            log.uplink_mb.extend(float(u) / 1e6 for u in uplink)
+            if ledger is not None:
+                wall_each = (block_wall / num
+                             if block_wall is not None else None)
+                mem = (prof_mod.device_memory_peak() if sample_sys
+                       else None)
+                comm_stack = jax.device_get(per_round["comm"])
+                taps_stack = (jax.device_get(per_round["taps"])
+                              if "taps" in per_round else None)
+                sel_stack = (np.asarray(per_round["selection"])
+                             if "selection" in per_round else None)
+                for i in range(num):
+                    ledger.round(
+                        start_round + t0 + i, losses[i],
+                        jax.tree.map(lambda a, i=i: a[i], comm_stack),
+                        uplink[i],
+                        taps=(jax.tree.map(lambda a, i=i: a[i], taps_stack)
+                              if taps_stack is not None else None),
+                        selection=(sel_stack[i] if sel_stack is not None
+                                   else None),
+                        wall_s=wall_each, mem_peak_bytes=mem)
+            t_last = start_round + cut - 1
+            if eval_fn is not None:
+                err = float(eval_fn(carry[0]))
+                log.test_errors.append((t_last, err, float(uplink[-1])))
+                if ledger is not None:
+                    ledger.eval(t_last, err, float(uplink[-1]))
+                sink.round(t_last, float(losses[-1]), test_error=err,
+                           uplink_bytes=float(uplink[-1]))
+            elif sink.enabled:
+                sink.round(t_last, float(losses[-1]))
+            win.block_end(start_round + cut)
+            t0 = cut
+    finally:
+        win.close()
+        if ledger is not None:
+            ledger.close()
     params, final_state, acc = carry
     log.meter = comm_mod.CommMeter.from_accumulator(acc)
     log.final_state = final_state

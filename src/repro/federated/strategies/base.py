@@ -227,6 +227,47 @@ class FLStrategy:
             selection, umap, divergence_feedback=self.needs_divergence,
             param_bytes_override=param_bytes_override)
 
+    # ---- telemetry taps (observability; jit-safe like every hook) ----
+    # global-state entries at most this many elements are passed through
+    # verbatim (FedLAMA's (U,) interval/ttl vectors); larger entries are
+    # summarised by their Frobenius norm instead.
+    tap_passthrough_max: int = 256
+
+    def telemetry_taps(self, state: Optional[dict],
+                       selection: jnp.ndarray,
+                       divs: Optional[jnp.ndarray],
+                       umap: UnitMap) -> dict:
+        """Per-round observability dict for the telemetry subsystem
+        (``FLConfig(telemetry=TelemetryConfig(taps=True))``): a flat
+        ``{name: array}`` of small summaries recorded into the round
+        ledger. Called once per round inside the compiled round function
+        with the same REPLICATED inputs on every engine — ``selection``
+        is the (K, U) matrix, ``divs`` the (K, U) Eq. 3 divergence matrix
+        (or None), and ``state`` holds only the *global* entries (client
+        rows are device-local under a mesh; the engines tap their norms
+        separately). Must be jit-safe with a static key set.
+
+        Default: per-unit selection counts, per-unit divergence
+        mean/max, and each global state entry — verbatim when it is a
+        single small array (≤ :attr:`tap_passthrough_max` elements, e.g.
+        FedLAMA's (U,) interval/ttl vectors), by norm otherwise.
+        """
+        taps = {"sel_count": jnp.sum(selection, axis=0)}
+        if divs is not None:
+            taps["div_mean"] = jnp.mean(divs, axis=0)
+            taps["div_max"] = jnp.max(divs, axis=0)
+        if state and state.get("global"):
+            for name, entry in state["global"].items():
+                leaves = jax.tree.leaves(entry)
+                if len(leaves) == 1 and leaves[0].ndim <= 1 and \
+                        leaves[0].size <= self.tap_passthrough_max:
+                    taps[f"state_{name}"] = leaves[0]
+                else:
+                    sq = sum((jnp.sum(jnp.square(l.astype(jnp.float32)))
+                              for l in leaves), jnp.float32(0.0))
+                    taps[f"state_{name}_norm"] = jnp.sqrt(sq)
+        return taps
+
 
 # ======================================================================
 # Registry

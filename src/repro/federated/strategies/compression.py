@@ -67,6 +67,11 @@ class QuantizedUpload(FLStrategy):
     def select(self, divs, key, k, u, n):
         return self.inner.select(divs, key, k, u, n)
 
+    def telemetry_taps(self, state, selection, divs, umap):
+        # a custom inner tap hook survives composition; the engines tap
+        # the wrapper's EF residual norms via the client-state seam.
+        return self.inner.telemetry_taps(state, selection, divs, umap)
+
     def aggregate(self, uploads, umap, selection, data_sizes,
                   global_params, axis_name=None):
         return self.inner.aggregate(uploads, umap, selection, data_sizes,

@@ -1,0 +1,27 @@
+"""Round telemetry subsystem: in-jit taps, JSONL ledger, profiling hooks.
+
+Light imports only — the ledger readers and :class:`ProgressSink` are
+numpy/stdlib-only so consumers (``launch/monitor.py``, report tooling)
+can import this package without pulling in JAX. The jit-side helpers
+live in :mod:`repro.telemetry.taps` and the profiler glue in
+:mod:`repro.telemetry.profiling`; the round drivers import those
+directly.
+"""
+from repro.telemetry.config import TelemetryConfig, VERBOSITY_MODES
+from repro.telemetry.ledger import (
+    LEDGER_SCHEMA,
+    RoundLedger,
+    read_ledger,
+    split_runs,
+)
+from repro.telemetry.sink import ProgressSink
+
+__all__ = [
+    "TelemetryConfig",
+    "VERBOSITY_MODES",
+    "LEDGER_SCHEMA",
+    "RoundLedger",
+    "read_ledger",
+    "split_runs",
+    "ProgressSink",
+]

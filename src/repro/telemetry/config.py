@@ -1,0 +1,89 @@
+"""Telemetry configuration: what the round drivers tap, log, and profile.
+
+``FLConfig(telemetry=TelemetryConfig(...))`` switches the round engines
+from their default fire-and-forget metrics into structured observability:
+
+- **in-jit metric taps** (``taps=True``) widen the per-round metrics dict
+  with per-layer divergence vectors (the Eq. 4 inputs), per-layer
+  selection counts, per-client selection masks (``full_selection``), and
+  strategy-state summaries (FedLAMA's interval/ttl vectors, EF residual
+  norms) — all collected on device through the scan carry outputs /
+  shard_map out_specs, with **no host syncs mid-scan**;
+- a **JSONL event ledger** (``ledger_path``): one schema-versioned record
+  per round (plus run-header and eval records), written incrementally by
+  both drivers and opened in append mode, so a run resumed via
+  ``start_round``/``server_state`` continues a contiguous ledger;
+- **profiling hooks**: a ``jax.profiler`` trace window over a round range
+  (``profile_rounds``), per-round wall-clock and peak-device-memory
+  sampling (``sample_system``), and the engine-cache retrace counters in
+  :mod:`repro.telemetry.profiling`;
+- a **verbosity-controlled progress sink** (``verbosity``) replacing the
+  drivers' hardcoded ``print`` reporting: ``quiet`` / ``human`` (the
+  classic one-line-per-eval format) / ``structured`` (JSON lines).
+
+``telemetry=None`` (the FLConfig default) is the zero-cost path: the
+compiled rounds are unchanged, no extra scan-carry leaves exist, and
+fixed-seed trajectories are bit-identical to a build without this module.
+
+The config must stay hashable (``FLConfig`` is a jit-cache key);
+:meth:`trace_key` strips the host-only fields so e.g. two runs differing
+only in ``ledger_path`` share one compiled round.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+VERBOSITY_MODES = ("auto", "quiet", "human", "structured")
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Per-run observability knobs (see module docstring)."""
+
+    # ---- in-jit taps (trace-relevant: change the compiled round) ----
+    taps: bool = True            # per-layer divergence/selection/state taps
+    full_selection: bool = True  # include the full (K, U) selection mask
+    # ---- host-side event ledger ----
+    ledger_path: Optional[str] = None   # JSONL sink; None = no ledger
+    run_id: str = ""                    # free-form run label in the header
+    # ---- progress sink ----
+    # "auto" follows the driver's ``verbose`` flag (human when verbose);
+    # "quiet"/"human"/"structured" force a mode regardless of ``verbose``.
+    verbosity: str = "auto"
+    # ---- profiling hooks ----
+    # (start, stop) absolute round indices for a jax.profiler trace window
+    # (inclusive; the scan driver snaps the window to eval-block bounds).
+    profile_rounds: Optional[tuple[int, int]] = None
+    profile_dir: str = "telemetry_trace"
+    # per-round wall-clock + peak-device-memory sampling (ledger fields;
+    # the scan driver amortises one sample per eval block)
+    sample_system: bool = True
+
+    def __post_init__(self):
+        if self.verbosity not in VERBOSITY_MODES:
+            raise ValueError(
+                f"verbosity must be one of {VERBOSITY_MODES}, "
+                f"got {self.verbosity!r}")
+        if self.profile_rounds is not None:
+            lo, hi = self.profile_rounds
+            if lo > hi or lo < 0:
+                raise ValueError(
+                    f"profile_rounds must be (start <= stop), 0-based "
+                    f"absolute round indices; got {self.profile_rounds}")
+            # tuples survive hashing; anything else (lists) would break the
+            # jit-cache key, so normalise here
+            object.__setattr__(self, "profile_rounds", (int(lo), int(hi)))
+
+    # ------------------------------------------------------------------
+    def trace_key(self) -> "TelemetryConfig":
+        """The trace-relevant subset: fields that change the *compiled*
+        round/block functions. Host-only fields (ledger path, run id,
+        verbosity, profiler window, system sampling) are reset so the
+        engine jit-cache is keyed only on what actually retraces."""
+        return TelemetryConfig(taps=self.taps,
+                               full_selection=self.full_selection)
+
+    @property
+    def wants_ledger(self) -> bool:
+        return bool(self.ledger_path)

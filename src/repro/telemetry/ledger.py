@@ -1,0 +1,159 @@
+"""Schema-versioned JSONL event ledger for FL training runs.
+
+One line per event, three kinds:
+
+- ``run``   — a run-segment header: schema version, free-form ``run_id``,
+  algorithm/driver/config metadata, the layer-unit names (so consumers can
+  label per-layer vectors without rebuilding the model), and the absolute
+  ``start_round``. Written once per driver invocation.
+- ``round`` — one record per training round: absolute round index, loss,
+  the full per-round communication profile (realised uplink/downlink
+  bytes), cumulative uplink, the in-jit telemetry taps (per-layer
+  divergence vectors, selection counts, strategy-state summaries), the
+  optional full per-client selection mask, and host-side samples
+  (wall-clock seconds, peak device memory).
+- ``eval``  — one record per evaluation point: round, test error,
+  cumulative uplink bytes at that point.
+
+The file is opened in **append** mode and flushed per event, so a crashed
+run keeps everything written so far and a run resumed with
+``start_round``/``server_state`` (see ``repro.checkpoint``) continues the
+same file with contiguous round indices — the resumed ledger's ``round``
+records are identical in indices to an uninterrupted run's (tested).
+Multiple runs may share one file (e.g. an algorithm sweep); consumers
+group records by the preceding ``run`` header via :func:`split_runs`.
+
+Readers (:func:`read_ledger`, :func:`split_runs`) are numpy/stdlib-only so
+``launch/monitor.py`` and report tooling work without JAX.
+
+Schema changes bump :data:`LEDGER_SCHEMA`; readers skip records from a
+*newer* major schema with a warning instead of crashing, and every record
+carries its own version so mixed files stay parseable.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Any, Optional
+
+import numpy as np
+
+LEDGER_SCHEMA = 1
+
+
+def _jsonable(v: Any) -> Any:
+    """Device arrays / numpy scalars -> plain JSON types."""
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    if isinstance(v, dict):
+        return {k: _jsonable(x) for k, x in v.items()}
+    arr = np.asarray(v)
+    if arr.ndim == 0:
+        return arr.item()
+    return arr.tolist()
+
+
+class RoundLedger:
+    """Incremental JSONL writer (append mode, one flush per event)."""
+
+    def __init__(self, path: str, meta: Optional[dict] = None):
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        self.path = path
+        self._f = open(path, "a")
+        if meta is not None:
+            self._write({"kind": "run", "time_unix": time.time(),
+                         **_jsonable(meta)})
+
+    # ------------------------------------------------------------------
+    def _write(self, record: dict) -> None:
+        record = {"schema": LEDGER_SCHEMA, **record}
+        self._f.write(json.dumps(record, allow_nan=True) + "\n")
+        self._f.flush()
+
+    def round(self, t: int, loss, comm: dict, uplink_cum_bytes,
+              taps: Optional[dict] = None, selection=None,
+              wall_s=None, mem_peak_bytes=None) -> None:
+        """One training-round record. Field set is driver-independent:
+        both ``run_training`` and ``run_training_scan`` emit exactly these
+        keys (schema-equality is pinned by tests/test_telemetry.py)."""
+        rec = {"kind": "round", "round": int(t),
+               "loss": float(np.asarray(loss)),
+               "comm": _jsonable(comm),
+               "uplink_cum_bytes": float(np.asarray(uplink_cum_bytes)),
+               "taps": _jsonable(taps) if taps is not None else None,
+               "wall_s": (float(wall_s) if wall_s is not None else None),
+               "mem_peak_bytes": (int(mem_peak_bytes)
+                                  if mem_peak_bytes is not None else None)}
+        if selection is not None:
+            rec["selection"] = np.asarray(selection).astype(int).tolist()
+        self._write(rec)
+
+    def eval(self, t: int, test_error, uplink_cum_bytes) -> None:
+        self._write({"kind": "eval", "round": int(t),
+                     "test_error": float(np.asarray(test_error)),
+                     "uplink_cum_bytes": float(np.asarray(uplink_cum_bytes))})
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+# ----------------------------------------------------------------------
+# Readers (stdlib + numpy only — no JAX)
+# ----------------------------------------------------------------------
+def read_ledger(path: str) -> list[dict]:
+    """Parse a JSONL ledger into a record list, skipping blank/corrupt
+    lines (a crashed writer may leave a torn final line) and records from
+    a newer schema (with one warning each)."""
+    records = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                print(f"ledger: skipping corrupt line {i + 1} of {path}",
+                      file=sys.stderr)
+                continue
+            if rec.get("schema", 0) > LEDGER_SCHEMA:
+                print(f"ledger: skipping line {i + 1} of {path} "
+                      f"(schema {rec.get('schema')} > {LEDGER_SCHEMA}; "
+                      "upgrade the reader)", file=sys.stderr)
+                continue
+            records.append(rec)
+    return records
+
+
+def split_runs(records: list[dict]) -> list[dict]:
+    """Group a record list into run segments: each ``run`` header starts a
+    segment that collects the following ``round``/``eval`` records.
+    Headerless records (hand-rolled files) land in a segment with
+    ``meta=None``."""
+    runs: list[dict] = []
+
+    def _fresh(meta):
+        return {"meta": meta, "rounds": [], "evals": []}
+
+    cur = None
+    for rec in records:
+        kind = rec.get("kind")
+        if kind == "run":
+            cur = _fresh(rec)
+            runs.append(cur)
+        elif kind in ("round", "eval"):
+            if cur is None:
+                cur = _fresh(None)
+                runs.append(cur)
+            cur["rounds" if kind == "round" else "evals"].append(rec)
+    return runs

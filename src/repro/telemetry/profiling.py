@@ -1,0 +1,143 @@
+"""Profiling hooks: trace windows, retrace counters, system sampling.
+
+Three independent facilities the round drivers wire in when telemetry is
+configured:
+
+- :class:`ProfileWindow` — a ``jax.profiler`` trace over a configurable
+  absolute-round range (``TelemetryConfig.profile_rounds``). The host
+  driver opens/closes it exactly at the window bounds; the scan driver
+  snaps to eval-block boundaries (a jitted ``lax.scan`` cannot be split
+  mid-block). Profiler failures degrade to a one-time warning — tracing
+  is best-effort observability, never a correctness dependency.
+- **engine-cache retrace counters** — ``repro.federated.server``'s
+  compiled-callable cache reports every build/hit here, so "did this
+  config recompile?" is a queryable fact instead of a wall-clock guess:
+  :func:`engine_cache_stats` after two identical ``run_training_scan``
+  calls must show zero new builds (regression-tested).
+- :func:`device_memory_peak` / wall-clock sampling — best-effort
+  ``memory_stats()`` peak bytes for the ledger's per-round system fields
+  (returns ``None`` on backends that don't report, e.g. CPU).
+"""
+from __future__ import annotations
+
+import collections
+import sys
+from typing import Optional
+
+# ----------------------------------------------------------------------
+# Engine-cache retrace counters
+# ----------------------------------------------------------------------
+_CACHE_EVENTS: "collections.Counter[str]" = collections.Counter()
+
+
+def note_engine_cache(kind: str, *, hit: bool) -> None:
+    """Called by the round-engine compiled-callable cache on every lookup:
+    ``kind`` is the cache's entry kind ('round' for the host driver's
+    jitted round, 'block' for the scan driver's block fn)."""
+    _CACHE_EVENTS[f"{kind}_{'hits' if hit else 'builds'}"] += 1
+
+
+def engine_cache_stats() -> dict:
+    """Cumulative build/hit counts per engine kind since the last reset.
+    ``<kind>_builds`` counts fresh traces+compiles (a nonzero delta across
+    two identical driver calls means the compiled-callable cache missed —
+    the retrace regression the telemetry subsystem pins)."""
+    return dict(_CACHE_EVENTS)
+
+
+def reset_engine_cache_stats() -> None:
+    _CACHE_EVENTS.clear()
+
+
+# ----------------------------------------------------------------------
+# System sampling
+# ----------------------------------------------------------------------
+def device_memory_peak() -> Optional[int]:
+    """Peak device-memory bytes of device 0, or None when the backend
+    does not report memory stats (CPU) or the query fails."""
+    try:
+        import jax
+        stats = jax.local_devices()[0].memory_stats()
+    except Exception:
+        return None
+    if not stats:
+        return None
+    peak = stats.get("peak_bytes_in_use") or stats.get("bytes_in_use")
+    return int(peak) if peak else None
+
+
+# ----------------------------------------------------------------------
+# jax.profiler trace windows
+# ----------------------------------------------------------------------
+class ProfileWindow:
+    """Start/stop a ``jax.profiler`` trace over a round range.
+
+    Host driver: ``round_begin(t)`` / ``round_end(t)`` bracket each round
+    — the trace starts when ``t`` hits the window's first round and stops
+    after its last. Scan driver: ``block_begin(t0, t1)`` /
+    ``block_end(t1)`` bracket each eval block with absolute round bounds
+    ``[t0, t1)`` — the trace covers every block overlapping the window
+    (the window is snapped outward to block boundaries).
+    """
+
+    def __init__(self, rounds: Optional[tuple[int, int]], trace_dir: str):
+        self.lo, self.hi = rounds if rounds is not None else (None, None)
+        self.trace_dir = trace_dir
+        self.active = False
+        self._warned = False
+
+    @classmethod
+    def from_config(cls, telemetry) -> "ProfileWindow":
+        if telemetry is None:
+            return cls(None, "")
+        return cls(telemetry.profile_rounds, telemetry.profile_dir)
+
+    # ------------------------------------------------------------------
+    def _start(self) -> None:
+        try:
+            import jax
+            jax.profiler.start_trace(self.trace_dir)
+            self.active = True
+        except Exception as e:   # profiling is best-effort
+            if not self._warned:
+                print(f"telemetry: profiler trace unavailable ({e})",
+                      file=sys.stderr)
+                self._warned = True
+            self.lo = None       # don't retry every round
+
+    def _stop(self) -> None:
+        if not self.active:
+            return
+        try:
+            import jax
+            jax.profiler.stop_trace()
+        except Exception as e:
+            if not self._warned:
+                print(f"telemetry: profiler stop failed ({e})",
+                      file=sys.stderr)
+                self._warned = True
+        self.active = False
+
+    # ---- host driver: exact round bounds ----
+    def round_begin(self, t: int) -> None:
+        if self.lo is not None and not self.active and self.lo <= t <= self.hi:
+            self._start()
+
+    def round_end(self, t: int) -> None:
+        if self.active and t >= self.hi:
+            self._stop()
+
+    # ---- scan driver: eval-block granularity ----
+    def block_begin(self, t0: int, t1: int) -> None:
+        """Block covers absolute rounds [t0, t1)."""
+        if self.lo is not None and not self.active and \
+                t0 <= self.hi and t1 > self.lo:
+            self._start()
+
+    def block_end(self, t1: int) -> None:
+        if self.active and t1 > self.hi:
+            self._stop()
+
+    def close(self) -> None:
+        """Stop an open trace at end of run (window past the last round)."""
+        self._stop()
