@@ -12,8 +12,11 @@ import sys
 
 import jax
 
+import jax.numpy as jnp
+
 from repro.core import UnitMap, round_comm, selection as sel
 from repro.core.fedadp import comm_bytes as fedadp_bytes
+from repro.core.wire import UNIT_HEADER_BYTES
 from repro.federated.strategies.fedlama import expected_round_bytes
 from repro.models import cnn
 
@@ -52,6 +55,19 @@ def run(out=sys.stdout, rounds: int = 1000):
     lama = expected_round_bytes(umap, k, tau=k // n, lam=2)
     rows.append(("fedlama_hi", lama["hi"]))
     rows.append(("fedlama_lo", lama["lo"]))
+    # FedLDF + packed int8 wire format: same top-n mask, priced at the
+    # PackedPayload rate — ceil(params·8/8) level bytes + the per-unit
+    # scale/width header instead of fp32 unit sizes
+    p = jnp.asarray(umap.unit_params, jnp.float32)
+    packed8 = jnp.ceil(p * 8 / 8.0) + UNIT_HEADER_BYTES
+    stats = round_comm(masks["fedldf"], umap, divergence_feedback=True,
+                       unit_bytes_override=packed8)
+    rows.append(("fedldf_q8_packed", float(stats["uplink_total"])))
+    # ...and at the auto-allocation budget (4-bit average waterfill)
+    packed_auto = jnp.ceil(p * 4 / 8.0) + UNIT_HEADER_BYTES
+    stats = round_comm(masks["fedldf"], umap, divergence_feedback=True,
+                       unit_bytes_override=packed_auto)
+    rows.append(("fedldf_qauto4_packed", float(stats["uplink_total"])))
 
     for algo, up in rows:
         sav = 1 - up / fedavg_up

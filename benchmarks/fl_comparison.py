@@ -35,7 +35,8 @@ import jax.numpy as jnp
 
 from repro.data import (FederatedData, dirichlet_partition, iid_partition,
                         make_image_dataset)
-from repro.federated import (FLConfig, TelemetryConfig, registered_algos,
+from repro.federated import (FedADPOptions, FedLAMAOptions, FedLPOptions,
+                             FLConfig, TelemetryConfig, registered_algos,
                              run_training)
 from repro.models import cnn
 from repro.telemetry import read_ledger, split_runs
@@ -68,6 +69,11 @@ def run(paper_scale: bool = False, rounds: int = 40, seed: int = 0,
     eval_fn = jax.jit(lambda p: 1.0 - cnn.accuracy(p, cfg, test_batch))
 
     algos = tuple(algos) if algos is not None else registered_algos()
+    # equal-comm pinning, spelled per strategy (see module docstring);
+    # algos without an options class take algo_options=None
+    algo_opts = {"fedadp": FedADPOptions(keep=n / k),
+                 "fedlp": FedLPOptions(p=n / k),
+                 "fedlama": FedLAMAOptions(tau=max(1, round(k / n)))}
     results = {}
     print("fig,algo,round,uplink_mb,test_error", file=out)
     for fig, splitter in (("fig3_iid", iid_partition),
@@ -83,8 +89,7 @@ def run(paper_scale: bool = False, rounds: int = 40, seed: int = 0,
             fl = FLConfig(algo=algo, num_clients=n_clients,
                           clients_per_round=k, top_n=n, lr=0.08,
                           mode="vmap", batch_per_client=batch,
-                          fedadp_keep=n / k, fedlp_p=n / k,
-                          fedlama_tau=max(1, round(k / n)),
+                          algo_options=algo_opts.get(algo),
                           telemetry=TelemetryConfig(
                               ledger_path=ledger_path,
                               run_id=f"{fig}/{algo}",

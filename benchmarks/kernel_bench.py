@@ -3,6 +3,14 @@
 CSV rows: name,us_per_call,derived — wall time of the jitted jnp fast path
 (the deploy path on CPU) and of the Pallas kernel in interpret mode (the
 correctness path; TPU timing is N/A in this container).
+
+The ``uplink_*`` section is the packed-wire-format A/B: the fused
+dequant + error-feedback + Eq. 5 accumulate op (one jitted call, no fp32
+reconstruction ever materialized between stages) against the pre-wire
+unfused chain (dequant, accumulate, and residual update as three separate
+jitted ops over full fp32 buffers — the shape the quantized upload had
+before ``core/wire``).  ``run()`` returns a dict so the trendline gate can
+TRACK ``uplink_fused_speedup``; the CSV rows live under ``"rows"``.
 """
 from __future__ import annotations
 
@@ -16,6 +24,9 @@ from repro.kernels import aggregate as ka
 from repro.kernels import divergence as kd
 from repro.kernels import ref
 
+# floor workload for the uplink A/B: K clients × R layer-units × C params
+UPLINK_SHAPE = (8, 48, 1 << 16)
+
 
 def _time(fn, *args, iters=20) -> float:
     fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
@@ -26,7 +37,50 @@ def _time(fn, *args, iters=20) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run(out=sys.stdout):
+def _uplink_ab(iters=10) -> dict:
+    """Fused uplink op vs the unfused three-op chain on the floor shape.
+
+    Returns μs per call for both paths, the speedup, and the uplink bytes
+    each moves per round (packed int8 levels + fp32 scales vs the fp32
+    buffers the unfused chain ships/materializes).
+    """
+    k, r, c = UPLINK_SHAPE
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    levels = jax.random.randint(ks[0], (k, r, c), -127, 128).astype(jnp.int8)
+    scales = jax.random.uniform(ks[1], (k, r), minval=1e-4)
+    w = jax.random.uniform(ks[2], (k, r))
+    gate = (jax.random.uniform(ks[3], (k, r)) < 0.5).astype(jnp.float32)
+    v = jax.random.normal(ks[4], (k, r, c))
+    e_old = jax.random.normal(ks[5], (k, r, c))
+
+    fused = jax.jit(ref.fused_uplink_ef)
+
+    # the pre-wire chain: three XLA programs, fp32 recon materialized twice
+    dequant = jax.jit(lambda l, s: l.astype(jnp.float32) * s[..., None])
+    accum = jax.jit(lambda w_, r_: jnp.einsum("kr,krc->rc", w_, r_))
+    resid = jax.jit(lambda g_, v_, r_, e_:
+                    g_[..., None] * (v_ - r_) + (1 - g_[..., None]) * e_)
+
+    def unfused(levels, scales, w, gate, v, e_old):
+        recon = dequant(levels, scales)
+        return accum(w, recon), resid(gate, v, recon, e_old)
+
+    args = (levels, scales, w, gate, v, e_old)
+    us_fused = _time(fused, *args, iters=iters)
+    us_unfused = _time(unfused, *args, iters=iters)
+    return {
+        "shape": f"{k}x{r}x{c}",
+        "uplink_fused_us": us_fused,
+        "uplink_unfused_us": us_unfused,
+        "uplink_fused_speedup": us_unfused / us_fused,
+        # wire bytes per round: int8 levels + fp32 per-unit scales ...
+        "uplink_packed_bytes": int(levels.nbytes + scales.nbytes),
+        # ... vs the fp32 reconstruction the unfused chain works over
+        "uplink_fp32_bytes": int(4 * levels.size + scales.nbytes),
+    }
+
+
+def run(out=sys.stdout) -> dict:
     key = jax.random.PRNGKey(0)
     r, c = 48, 1 << 18          # 48 layer-units × 262k params/unit
     a = jax.random.normal(key, (r, c))
@@ -47,9 +101,19 @@ def run(out=sys.stdout):
          _time(lambda x, y, z: ka.masked_accumulate(x, y, z, interpret=True),
                a[:4, :4096], a[:4, :4096], w[:4], iters=3), "interpret_mode"),
     ]
+    up = _uplink_ab()
+    rows += [
+        (f"uplink_fused_{up['shape']}", up["uplink_fused_us"],
+         f"{up['uplink_packed_bytes']/1e6:.0f}MB_wire"),
+        (f"uplink_unfused_{up['shape']}", up["uplink_unfused_us"],
+         f"{up['uplink_fp32_bytes']/1e6:.0f}MB_fp32"),
+    ]
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", file=out)
-    return rows
+    print(f"# uplink fusion speedup: {up['uplink_fused_speedup']:.2f}x, "
+          f"wire bytes {up['uplink_packed_bytes']/1e6:.0f}MB vs fp32 "
+          f"{up['uplink_fp32_bytes']/1e6:.0f}MB", file=out)
+    return {"rows": rows, **up}
 
 
 if __name__ == "__main__":

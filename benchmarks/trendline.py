@@ -37,6 +37,8 @@ WINDOW = 5
 # metric path -> human label. Higher is better for every tracked metric
 # (rates and speedups), so a regression is curr < (1 - threshold) * prev.
 TRACKED = {
+    ("kernel", "uplink_fused_speedup"): "[kernel] fused-uplink speedup "
+                                        "vs unfused chain",
     ("engine", "host_rate"): "[engine] host-loop rounds/sec",
     ("engine", "scan_rate"): "[engine] scan-engine rounds/sec",
     ("engine", "fedlama_rate"): "[engine] fedlama (stateful) rounds/sec",
@@ -56,7 +58,10 @@ def extract(results: dict) -> dict[str, float]:
     comparison only covers metrics present in BOTH runs."""
     out: dict[str, float] = {}
     for (section, key), _ in TRACKED.items():
-        val = (results.get(section) or {}).get(key)
+        sec = results.get(section)
+        if not isinstance(sec, dict):
+            continue   # e.g. pre-wire [kernel] artifacts stored a CSV list
+        val = sec.get(key)
         if isinstance(val, (int, float)):
             out[f"{section}.{key}"] = float(val)
     for d, rate in ((results.get("shard") or {}).get("mesh") or {}).items():

@@ -5,6 +5,11 @@ quantization (b/32) and client-side error feedback — e.g. n/K=0.2 × int8
 ⇒ ~97.5 % total uplink reduction vs FedAvg.
 
     PYTHONPATH=src python examples/compressed_fl.py --bits 8 --rounds 20
+
+``--bits auto`` turns on divergence-driven per-layer bit allocation: the
+packed wire format waterfills widths in [2, 8] (4-bit average budget)
+from the round's Eq. 3 divergence stats, so fast-diverging layers get
+finer quantization under the same byte budget.
 """
 import argparse
 import functools
@@ -15,16 +20,20 @@ import numpy as np
 
 from repro.core.units import UnitMap
 from repro.data import FederatedData, dirichlet_partition, make_image_dataset
-from repro.federated import FLConfig, build_round_fn, sample_clients
+from repro.federated import (CompressionConfig, FLConfig, build_round_fn,
+                             sample_clients)
 from repro.models import cnn
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--bits", default="8",
+                    help="quantization width 2..8, or 'auto' for "
+                         "divergence-driven per-layer allocation")
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--no-error-feedback", action="store_true")
     args = ap.parse_args()
+    bits = args.bits if args.bits == "auto" else int(args.bits)
 
     cfg = cnn.VGGConfig().reduced()
     n_clients, k, n = 12, 6, 2
@@ -42,7 +51,8 @@ def main():
     use_ef = not args.no_error_feedback
     fl = FLConfig(algo="fedldf", num_clients=n_clients, clients_per_round=k,
                   top_n=n, lr=0.08, mode="vmap", batch_per_client=16,
-                  quantize_bits=args.bits, error_feedback=use_ef)
+                  compression=CompressionConfig(bits=bits,
+                                                error_feedback=use_ef))
     round_fn = jax.jit(build_round_fn(loss_fn, umap, fl))
 
     # error-feedback residuals live per client (host-side store, all N).
@@ -82,7 +92,8 @@ def main():
                   f"err {float(eval_fn(params)):.4f} "
                   f"uplink {uplink/1e6:7.2f}MB "
                   f"(saved {100*(1-uplink/fedavg_ref):.1f}% vs FedAvg)")
-    print(f"\nint{args.bits} + top-{n}/{k} selection + "
+    print(f"\n{'auto-bit' if bits == 'auto' else f'int{bits}'} "
+          f"+ top-{n}/{k} selection + "
           f"{'EF' if use_ef else 'no EF'}: "
           f"total uplink saving {100*(1-uplink/fedavg_ref):.2f}%")
 

@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.checkpoint import load_server_state, save_server_state
 from repro.data import FederatedData, iid_partition, make_image_dataset
-from repro.federated import FLConfig, run_training_scan
+from repro.federated import FedLAMAOptions, FLConfig, run_training_scan
 from repro.models import cnn
 
 
@@ -51,7 +51,7 @@ def main():
 
     fl = FLConfig(algo="fedlama", num_clients=10, clients_per_round=5,
                   top_n=2, lr=0.05, batch_per_client=8,
-                  fedlama_tau=args.tau, fedlama_lam=args.lam)
+                  algo_options=FedLAMAOptions(tau=args.tau, lam=args.lam))
     p_full, log = run_training_scan(params, loss_fn, data, fl,
                                     rounds=args.rounds, seed=0)
     assert all(np.isfinite(l) for l in log.losses)

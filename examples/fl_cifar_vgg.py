@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from repro.core.convergence import BoundParams, asymptotic_gap
 from repro.data import (FederatedData, dirichlet_partition, iid_partition,
                         make_image_dataset)
-from repro.federated import FLConfig, run_training
+from repro.federated import FedADPOptions, FLConfig, run_training
 from repro.models import cnn
 
 
@@ -56,7 +56,8 @@ def main():
     for algo in args.algos.split(","):
         fl = FLConfig(algo=algo, num_clients=n_clients, clients_per_round=k,
                       top_n=n, lr=0.08, mode="vmap", batch_per_client=batch,
-                      fedadp_keep=n / k)
+                      algo_options=(FedADPOptions(keep=n / k)
+                                    if algo == "fedadp" else None))
         params = cnn.init_params(jax.random.PRNGKey(args.seed), cfg)
         params, log = run_training(params, loss_fn, data, fl,
                                    rounds=args.rounds, eval_fn=eval_fn,

@@ -1,6 +1,6 @@
 """FedLDF core: the paper's contribution as composable JAX modules."""
 from repro.core import (aggregation, comm, compress, convergence, fedadp,
-                        lowrank, selection, units)
+                        lowrank, selection, units, wire)
 from repro.core.aggregation import (aggregate_stacked, fedavg_stacked,
                                     streaming_add, streaming_finalize,
                                     streaming_init, unit_weights)
@@ -9,12 +9,17 @@ from repro.core.convergence import BoundParams, asymptotic_gap, contraction_A
 from repro.core.selection import (client_dropout, full_participation,
                                   random_per_layer, topn_divergence)
 from repro.core.units import UnitMap
+from repro.core.wire import (UNIT_HEADER_BYTES, CompressionConfig,
+                             PackedPayload, allocate_bits)
 
 __all__ = [
-    "aggregation", "comm", "convergence", "fedadp", "selection", "units",
+    "aggregation", "comm", "compress", "convergence", "fedadp", "lowrank",
+    "selection", "units", "wire",
     "aggregate_stacked", "fedavg_stacked", "streaming_add",
     "streaming_finalize", "streaming_init", "unit_weights",
     "CommMeter", "round_comm", "BoundParams", "asymptotic_gap",
     "contraction_A", "client_dropout", "full_participation",
     "random_per_layer", "topn_divergence", "UnitMap",
+    "UNIT_HEADER_BYTES", "CompressionConfig", "PackedPayload",
+    "allocate_bits",
 ]

@@ -23,6 +23,7 @@ DIVERGENCE_SCALAR_BYTES = 4  # float32 feedback scalars
 def round_comm(selection: jnp.ndarray, umap: UnitMap, *,
                divergence_feedback: bool = True,
                param_bytes_override: float | None = None,
+               unit_bytes_override: jnp.ndarray | None = None,
                axis_name: str | None = None) -> dict:
     """Per-round communication in bytes.
 
@@ -31,6 +32,13 @@ def round_comm(selection: jnp.ndarray, umap: UnitMap, *,
     plus ``axis_name``: the payload sum and client count are ``psum``'d
     across the axis, so every device returns the identical global totals —
     no all-gather of the selection matrix is needed for accounting.
+
+    ``param_bytes_override`` reprices every parameter uniformly (legacy
+    quantized pricing, e.g. 1.0 for int8).  ``unit_bytes_override`` — a
+    (U,) per-unit byte vector, usually ``PackedPayload.unit_wire_bytes`` —
+    takes precedence and is the packed wire format's source of truth
+    (header + ceil(params·bits/8) per unit, possibly traced per round).
+
     Returns dict with jnp scalars:
       uplink_payload   — Σ_{k,u} s[k,u]·bytes(u)        (selected layers)
       uplink_feedback  — K·U·4 if divergence feedback is on (FedLDF only)
@@ -43,8 +51,12 @@ def round_comm(selection: jnp.ndarray, umap: UnitMap, *,
     k = selection.shape[0]
     if axis_name is not None:
         k = k * jax.lax.psum(1, axis_name)   # global K across the mesh
-    scale = 1.0 if param_bytes_override is None else param_bytes_override / 4.0
-    unit_bytes = umap.unit_bytes_array() * scale
+    if unit_bytes_override is not None:
+        unit_bytes = jnp.asarray(unit_bytes_override, jnp.float32)
+    else:
+        scale = (1.0 if param_bytes_override is None
+                 else param_bytes_override / 4.0)
+        unit_bytes = umap.unit_bytes_array() * scale
     payload = jnp.sum(selection * unit_bytes[None, :])
     if axis_name is not None:
         payload = jax.lax.psum(payload, axis_name)

@@ -1,0 +1,309 @@
+"""Packed uplink wire format: what a compressed upload actually is.
+
+Before this module the quantize→error-feedback→aggregate chain operated on
+full fp32 pytrees — the "wire format" never existed in memory, so both
+compute and bandwidth accounting paid fp32 prices.  :class:`PackedPayload`
+makes it real: per-unit symmetric-quantized **levels** stored as int8 (or
+int4 nibble pairs when every bit-width fits in 4), per-unit fp32 **scales**,
+and a per-unit **bit-width vector**.  ``nbytes``/``unit_wire_bytes`` are the
+single source of truth for comm accounting (``core/comm`` consumes them via
+``unit_bytes_override``), and the packed buffers are exactly what the fused
+uplink kernel (``kernels/uplink.py``) streams through VMEM.
+
+Bit-widths may be **adaptive**: ``CompressionConfig(bits="auto")`` turns on
+rate-distortion waterfilling (:func:`allocate_bits`) over the per-layer
+divergence statistics FedLDF already computes (Eq. 3) — layers whose clients
+diverge more get more bits under a mean-bits budget (analysis: Federated
+Learning with Lossy Distributed Source Coding, arXiv:2204.10985).  The
+allocation is jit-safe: buffer shapes stay static (storage is int8), only
+the traced logical bit-width vector changes per round.
+
+Per-unit wire cost is ``ceil(params·bits/8)`` level bytes plus a
+:data:`UNIT_HEADER_BYTES` header (one fp32 scale + one bit-width byte).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.units import UnitMap
+
+Pytree = Any
+
+# per-unit wire header: one fp32 scale + one bit-width byte
+UNIT_HEADER_BYTES = 5
+_EPS = 1e-20
+
+
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """Uplink compression policy (``FLConfig.compression``).
+
+    bits            int 2..8 for a fixed width, or ``"auto"`` for
+                    divergence-driven per-layer allocation.
+    error_feedback  carry client-side quantization residuals across rounds.
+    allocation      bit-allocation policy when ``bits == "auto"``
+                    (only ``"waterfill"`` today).
+    avg_bits        mean-bits-per-param budget for ``"auto"``.
+    min_bits/max_bits  clamp range for allocated widths.
+    fused           route through the packed wire format + fused uplink
+                    kernel; ``False`` keeps the legacy unfused fp32 chain
+                    (kept as the A/B reference — see ``kernel_bench``).
+    """
+    bits: Union[int, str] = 8
+    error_feedback: bool = False
+    allocation: str = "waterfill"
+    avg_bits: float = 4.0
+    min_bits: int = 2
+    max_bits: int = 8
+    fused: bool = True
+
+    def __post_init__(self):
+        if isinstance(self.bits, str):
+            if self.bits != "auto":
+                raise ValueError(
+                    f"CompressionConfig.bits must be an int in [2, 8] or "
+                    f"'auto', got {self.bits!r}")
+        elif not 2 <= int(self.bits) <= 8:
+            raise ValueError(
+                f"CompressionConfig.bits must be in [2, 8], got {self.bits}")
+        if self.allocation != "waterfill":
+            raise ValueError(
+                f"unknown bit-allocation policy {self.allocation!r} "
+                "(supported: 'waterfill')")
+        if not 1 <= self.min_bits <= self.max_bits <= 8:
+            raise ValueError(
+                f"need 1 <= min_bits <= max_bits <= 8, got "
+                f"[{self.min_bits}, {self.max_bits}]")
+        if self.is_auto and not self.min_bits <= self.avg_bits <= self.max_bits:
+            raise ValueError(
+                f"avg_bits={self.avg_bits} outside "
+                f"[min_bits={self.min_bits}, max_bits={self.max_bits}]")
+        if self.is_auto and not self.fused:
+            raise ValueError(
+                "bits='auto' needs the packed wire format (fused=True); "
+                "the legacy unfused chain only supports a fixed width")
+
+    @property
+    def is_auto(self) -> bool:
+        return self.bits == "auto"
+
+    @property
+    def storage_bits(self) -> int:
+        """Physical level storage: int4 nibble pairs when every possible
+        width fits in 4 bits, else int8.  Static — jit shapes depend on it."""
+        if self.is_auto:
+            return 4 if self.max_bits <= 4 else 8
+        return 4 if int(self.bits) <= 4 else 8
+
+    def bits_vector(self, umap: UnitMap,
+                    divs: jnp.ndarray | None = None) -> jnp.ndarray:
+        """(U,) f32 logical bit-widths — constant for fixed ``bits``,
+        waterfilled from the (K, U) divergence stats for ``"auto"``."""
+        if not self.is_auto:
+            return jnp.full((umap.num_units,), float(int(self.bits)),
+                            jnp.float32)
+        if divs is None:
+            raise ValueError("bits='auto' needs divergence stats")
+        return allocate_bits(divs, umap, avg_bits=self.avg_bits,
+                             min_bits=self.min_bits, max_bits=self.max_bits)
+
+
+# ----------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedPayload:
+    """One (or a stacked batch of) packed uplink payload(s).
+
+    levels   pytree matching the model structure; int8 leaves holding the
+             quantized levels (two int4 nibbles per byte along the last
+             axis when ``storage_bits == 4``).
+    scales   (..., U) fp32 per-unit dequantization scales.
+    bits     (U,) fp32 per-unit logical bit-widths.
+    storage_bits  static physical width of the level buffers (8 or 4).
+
+    Registered as a pytree, so payloads vmap/psum/shard like any leaf —
+    packed buffers slice along the 'model' mesh axis exactly as the fp32
+    params they stand in for.
+    """
+    levels: Pytree
+    scales: jnp.ndarray
+    bits: jnp.ndarray
+    storage_bits: int = 8
+
+    def tree_flatten(self):
+        return (self.levels, self.scales, self.bits), (self.storage_bits,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        levels, scales, bits = children
+        return cls(levels, scales, bits, storage_bits=aux[0])
+
+    @property
+    def nbytes(self) -> int:
+        """Physical packed size in bytes (static): int8 level buffers count
+        one byte per element (nibble packing already halved them), plus the
+        fp32 scales and one byte per bit-width entry."""
+        lv = sum(int(np.prod(leaf.shape))
+                 for leaf in jax.tree.leaves(self.levels))
+        return (lv + 4 * int(np.prod(self.scales.shape))
+                + int(np.prod(self.bits.shape)))
+
+    def unit_wire_bytes(self, umap: UnitMap) -> jnp.ndarray:
+        """(U,) f32 logical wire bytes per unit under the *allocated* widths:
+        ``ceil(params·bits/8) + UNIT_HEADER_BYTES``.  This — not fp32 unit
+        sizes — is what ``core/comm`` charges for a packed upload."""
+        p = jnp.asarray(umap.unit_params, jnp.float32)
+        return jnp.ceil(p * self.bits / 8.0) + UNIT_HEADER_BYTES
+
+
+# ----------------------------------------------------------------------
+# quantization with per-unit bit widths (generalizes core/compress to a
+# traced (U,) bits vector; identical math to quantize_unit_symmetric when
+# the vector is constant)
+
+def quantize_units(delta: Pytree, umap: UnitMap, bits: jnp.ndarray
+                   ) -> tuple[Pytree, jnp.ndarray]:
+    """Symmetric per-unit quantization under per-unit widths.
+
+    Returns (int levels as f32 pytree in [−qmax_u, qmax_u], scales (U,)).
+    """
+    qmax = jnp.exp2(bits.astype(jnp.float32) - 1.0) - 1.0
+    maxabs = jnp.zeros((umap.num_units,), jnp.float32)
+    for key, (off, n) in umap.spans.items():
+        for leaf in jax.tree.leaves(delta[key]):
+            flat = jnp.abs(leaf.astype(jnp.float32)).reshape(
+                (n, -1) if n > 1 else (1, -1)).max(axis=1)
+            seg = jax.lax.dynamic_slice(maxabs, (off,), (n,))
+            maxabs = jax.lax.dynamic_update_slice(
+                maxabs, jnp.maximum(seg, flat), (off,))
+    scales = jnp.maximum(maxabs, 1e-12) / qmax
+    inv = 1.0 / scales
+
+    def q_key(key):
+        off, n = umap.spans[key]
+        seg_i = jax.lax.dynamic_slice(inv, (off,), (n,))
+        seg_q = jax.lax.dynamic_slice(qmax, (off,), (n,))
+
+        def q(leaf):
+            shape = (n,) + (1,) * (leaf.ndim - 1)
+            if n > 1:
+                s, qm = seg_i.reshape(shape), seg_q.reshape(shape)
+            else:
+                s, qm = seg_i[0], seg_q[0]
+            return jnp.round(jnp.clip(leaf.astype(jnp.float32) * s, -qm, qm))
+
+        return jax.tree.map(q, delta[key])
+
+    return {k: q_key(k) for k in delta}, scales
+
+
+# ----------------------------------------------------------------------
+# int4 nibble packing (last axis; odd tails zero-padded)
+
+def _pack4(levels_i8: jnp.ndarray) -> jnp.ndarray:
+    c = levels_i8.shape[-1]
+    if c % 2:
+        pad = [(0, 0)] * (levels_i8.ndim - 1) + [(0, 1)]
+        levels_i8 = jnp.pad(levels_i8, pad)
+    u = (levels_i8.astype(jnp.int16) + 8).astype(jnp.uint8)  # [-7,7] -> 1..15
+    lo, hi = u[..., 0::2], u[..., 1::2]
+    return jax.lax.bitcast_convert_type(lo | (hi << 4), jnp.int8)
+
+
+def _unpack4(packed_i8: jnp.ndarray, c: int) -> jnp.ndarray:
+    b = jax.lax.bitcast_convert_type(packed_i8, jnp.uint8)
+    lo = (b & 0xF).astype(jnp.int16) - 8
+    hi = (b >> 4).astype(jnp.int16) - 8
+    out = jnp.stack([lo, hi], axis=-1).reshape(b.shape[:-1] + (-1,))
+    return out[..., :c].astype(jnp.int8)
+
+
+def pack_levels(levels: Pytree, storage_bits: int = 8) -> Pytree:
+    """Quantized levels pytree → physical wire buffers: int8 verbatim, or
+    int4 nibble pairs along the last axis when ``storage_bits == 4``."""
+    if storage_bits == 4:
+        return jax.tree.map(lambda l: _pack4(l.astype(jnp.int8)), levels)
+    return jax.tree.map(lambda l: l.astype(jnp.int8), levels)
+
+
+def pack(delta: Pytree, umap: UnitMap, bits: jnp.ndarray,
+         storage_bits: int = 8) -> PackedPayload:
+    """Quantize ``delta`` under the per-unit ``bits`` vector and pack the
+    levels into int8 (or int4 nibble-pair) buffers."""
+    levels, scales = quantize_units(delta, umap, bits)
+    return PackedPayload(pack_levels(levels, storage_bits), scales, bits,
+                         storage_bits=storage_bits)
+
+
+def unpack_levels(payload: PackedPayload, ref: Pytree) -> Pytree:
+    """Unpacked int8 levels, shaped like ``ref`` (the model pytree the
+    payload was packed from — needed to recover odd last-dim sizes)."""
+    if payload.storage_bits != 4:
+        return payload.levels
+    return jax.tree.map(lambda lv, r: _unpack4(lv, r.shape[-1]),
+                        payload.levels, ref)
+
+
+def dequantize(payload: PackedPayload, umap: UnitMap, ref: Pytree) -> Pytree:
+    """f32 delta reconstruction ``levels · scales`` (unfused reference —
+    the fused kernel in ``kernels/uplink.py`` never materializes this)."""
+    levels = unpack_levels(payload, ref)
+
+    def dq_key(key):
+        off, n = umap.spans[key]
+        seg = jax.lax.dynamic_slice(payload.scales, (off,), (n,))
+
+        def dq(leaf):
+            s = seg.reshape((n,) + (1,) * (leaf.ndim - 1)) if n > 1 else seg[0]
+            return leaf.astype(jnp.float32) * s
+
+        return jax.tree.map(dq, levels[key])
+
+    return {k: dq_key(k) for k in levels}
+
+
+# ----------------------------------------------------------------------
+def allocate_bits(divs: jnp.ndarray, umap: UnitMap, *,
+                  avg_bits: float = 4.0, min_bits: int = 2,
+                  max_bits: int = 8, iters: int = 40) -> jnp.ndarray:
+    """Reverse-waterfilling bit allocation from divergence statistics.
+
+    Per-unit distortion proxy: the clients' mean squared divergence per
+    parameter (Eq. 3 stats normalized by unit size).  The rate-distortion
+    shape ``b_u = clip(λ + ½log₂ σ²_u, min, max)`` is monotone in the water
+    level λ, so a fixed-count bisection (jit-safe: no data-dependent trip
+    count) finds the largest λ whose parameter-weighted mean stays within
+    ``avg_bits``; widths are floored to integers, which can only land the
+    budget lower.  Uniform per-parameter divergence energy ⇒ every unit
+    gets ``avg_bits``; units whose clients diverge more per parameter get
+    proportionally more bits.
+    """
+    p = jnp.asarray(umap.unit_params, jnp.float32)
+    d = divs.astype(jnp.float32)
+    if d.ndim == 2:
+        d = jnp.mean(jnp.square(d), axis=0)
+    else:
+        d = jnp.square(d)
+    r = 0.5 * jnp.log2(jnp.maximum(d / jnp.maximum(p, 1.0), _EPS))
+    lo = jnp.float32(min_bits) - jnp.max(r)
+    hi = jnp.float32(max_bits) - jnp.min(r)
+    psum = jnp.sum(p)
+
+    def mean_bits(lam):
+        return jnp.sum(p * jnp.clip(lam + r, min_bits, max_bits)) / psum
+
+    def body(_, bounds):
+        blo, bhi = bounds
+        mid = 0.5 * (blo + bhi)
+        over = mean_bits(mid) > avg_bits
+        return jnp.where(over, blo, mid), jnp.where(over, mid, bhi)
+
+    lam, _ = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    b = jnp.clip(lam + r, min_bits, max_bits)
+    return jnp.floor(b + 1e-4)

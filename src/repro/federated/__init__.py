@@ -13,17 +13,24 @@ from repro.federated.server import (FLConfig, TrainLog, build_round_fn,
 # the residual-store helpers moved to launch/sharding (they are state-seam
 # placement policy, not server plumbing); re-exported here for compat
 from repro.launch.sharding import init_residual_store, residual_store_specs
-from repro.federated.strategies import (FLStrategy, make_strategy,
+from repro.federated.strategies import (FedADPOptions, FedLAMAOptions,
+                                        FedLPOptions, FLStrategy,
+                                        QuantizedUpload, make_strategy,
                                         register_strategy, registered_algos,
                                         strategy_registry,
                                         unregister_strategy)
+# the wire-format config rides FLConfig(compression=...); re-exported so
+# FL callers need one import (full wire format: repro.core.wire)
+from repro.core.wire import CompressionConfig
 # observability config rides FLConfig(telemetry=...); re-exported so FL
 # callers need one import (full subsystem: repro.telemetry)
 from repro.telemetry import TelemetryConfig
 
 __all__ = ["make_local_update", "plain_sgd_client", "local_rows",
            "round_keys", "sample_clients", "sample_clients_jax", "ALGOS",
-           "FLConfig", "FLStrategy", "TelemetryConfig", "TrainLog",
+           "CompressionConfig", "FLConfig", "FLStrategy", "FedADPOptions",
+           "FedLAMAOptions", "FedLPOptions", "QuantizedUpload",
+           "TelemetryConfig", "TrainLog",
            "build_round_fn", "build_round_scan", "build_round_vmap",
            "init_residual_store", "make_strategy", "register_strategy",
            "registered_algos", "residual_store_specs", "run_training",

@@ -65,6 +65,7 @@ import collections
 import dataclasses
 import functools
 import time
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
@@ -75,12 +76,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import aggregation as agg
 from repro.core import comm as comm_mod
 from repro.core.units import UnitMap
+from repro.core.wire import CompressionConfig
 from repro.data.device import ClientShards
 from repro.federated.client import make_local_update
 from repro.federated.sampling import (local_rows, round_keys, sample_clients,
                                       sample_clients_jax)
-from repro.federated.strategies import (get_strategy_cls, make_strategy,
-                                        registered_algos)
+from repro.federated.strategies import (FedADPOptions, FedLAMAOptions,
+                                        FedLPOptions, get_strategy_cls,
+                                        make_strategy, registered_algos)
 from repro.launch.mesh import (CLIENT_AXIS, MODEL_AXIS, client_mesh_size,
                                model_mesh_size, replicated_rng,
                                shard_map_norep)
@@ -101,6 +104,18 @@ def __getattr__(name):   # PEP 562: ALGOS is a live view of the registry
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
+# deprecated flat FLConfig fields → (owning algo, options field); the
+# normalization shim in FLConfig.__post_init__ folds non-default values
+# into algo_options and mirrors the normalized options back, so old
+# readers of the flat names keep seeing the effective values.
+_DEPRECATED_ALGO_FIELDS = (
+    ("fedadp_keep", "fedadp", "keep"),
+    ("fedlp_p", "fedlp", "p"),
+    ("fedlama_tau", "fedlama", "tau"),
+    ("fedlama_lam", "fedlama", "lam"),
+)
+
+
 @dataclasses.dataclass(frozen=True)
 class FLConfig:
     algo: str = "fedldf"
@@ -110,16 +125,25 @@ class FLConfig:
     local_steps: int = 1
     lr: float = 0.05
     mode: str = "vmap"             # vmap | scan
-    fedadp_keep: float = 0.2       # FedADP keep fraction (equal-comm setting)
-    fedlp_p: float = 0.5           # FedLP per-layer keep probability
-    fedlama_tau: int = 2           # FedLAMA base aggregation interval τ'
-    fedlama_lam: int = 2           # FedLAMA long-interval multiplier λ
+    # per-strategy knobs: FedADPOptions | FedLPOptions | FedLAMAOptions |
+    # a plugin strategy's declared options_cls. None resolves to the
+    # strategy's defaults (or to the deprecated flat fields below).
+    algo_options: Optional[Any] = None
+    # uplink compression policy (repro.core.wire.CompressionConfig):
+    # packed wire-format quantized uploads + optional error feedback +
+    # divergence-driven bit allocation (bits="auto"). None = fp32 uploads.
+    compression: Optional[CompressionConfig] = None
     batch_per_client: int = 32
     # remat local-training steps (jax.checkpoint): caps activation memory
     # when K stacked clients run inside the scan engine
     remat: bool = False
-    # beyond-paper: quantized delta upload (0 = off) + error feedback
-    quantize_bits: int = 0
+    # ---- deprecated flat knobs (warn + fold into algo_options /
+    # compression; kept as mirrors of the normalized values) ----
+    fedadp_keep: float = 0.2       # FedADP keep fraction (equal-comm setting)
+    fedlp_p: float = 0.5           # FedLP per-layer keep probability
+    fedlama_tau: int = 2           # FedLAMA base aggregation interval τ'
+    fedlama_lam: int = 2           # FedLAMA long-interval multiplier λ
+    quantize_bits: int = 0         # quantized delta upload (0 = off)
     error_feedback: bool = False
     # multi-device: shard the stacked client axis over this mesh's 'clients'
     # axis; a 2-D ('clients', 'model') mesh (make_client_mesh(model=M))
@@ -132,6 +156,108 @@ class FLConfig:
     # bit-identical to a config without telemetry.
     telemetry: Optional[TelemetryConfig] = None
 
+    # ------------------------------------------------------------------
+    def _normalize_algo_options(self, scls):
+        """Fold the deprecated flat per-algo knobs into ``algo_options``
+        (validating through the owning options classes) and mirror the
+        normalized options back onto the flat names, so equivalent
+        spellings compare (and jit-cache) equal."""
+        defaults = {f.name: f.default
+                    for f in dataclasses.fields(type(self))}
+        flat_set = [name for name, _, _ in _DEPRECATED_ALGO_FIELDS
+                    if getattr(self, name) != defaults[name]]
+        # validation of the flat values is unconditional (as it was when
+        # FLConfig owned these checks), algo match or not: constructing
+        # the options classes raises ValueError on bad values.
+        legacy = {
+            "fedadp": FedADPOptions(keep=self.fedadp_keep),
+            "fedlp": FedLPOptions(p=self.fedlp_p),
+            "fedlama": FedLAMAOptions(tau=self.fedlama_tau,
+                                      lam=self.fedlama_lam),
+        }
+        opts = self.algo_options
+        if opts is not None:
+            ocls = getattr(scls, "options_cls", None)
+            if ocls is None:
+                raise TypeError(
+                    f"strategy {self.algo!r} declares no options class; "
+                    f"got algo_options={opts!r}")
+            if not isinstance(opts, ocls):
+                raise TypeError(
+                    f"algo_options for strategy {self.algo!r} must be "
+                    f"{ocls.__name__}, got {type(opts).__name__}")
+            # a flat field that disagrees with the options instance is a
+            # conflict; agreeing values (the mirrors dataclasses.replace
+            # round-trips) are fine.
+            for name, algo, field in _DEPRECATED_ALGO_FIELDS:
+                if algo != self.algo or name not in flat_set:
+                    continue
+                if getattr(self, name) != getattr(opts, field):
+                    raise ValueError(
+                        f"FLConfig.{name}={getattr(self, name)} conflicts "
+                        f"with algo_options.{field}="
+                        f"{getattr(opts, field)}; pass one spelling, "
+                        "not both")
+        else:
+            if flat_set:
+                warnings.warn(
+                    f"FLConfig fields {flat_set} are deprecated; pass "
+                    "algo_options=FedADPOptions/FedLPOptions/"
+                    "FedLAMAOptions(...) instead",
+                    DeprecationWarning, stacklevel=3)
+            opts = legacy.get(self.algo)
+            if opts is None and getattr(scls, "options_cls", None):
+                opts = scls.options_cls()
+            object.__setattr__(self, "algo_options", opts)
+        # mirror the normalized options back onto the flat names
+        for name, algo, field in _DEPRECATED_ALGO_FIELDS:
+            if algo == self.algo and opts is not None:
+                object.__setattr__(self, name, getattr(opts, field))
+
+    def _normalize_compression(self, scls):
+        """Fold the deprecated ``quantize_bits``/``error_feedback`` flats
+        into ``compression`` and mirror back."""
+        comp = self.compression
+        if comp is not None:
+            if not isinstance(comp, CompressionConfig):
+                raise TypeError(
+                    "FLConfig.compression must be a repro.core.wire."
+                    f"CompressionConfig or None, got {type(comp)}")
+            # disagreement (not mere presence) is the conflict, so the
+            # mirrored flats survive dataclasses.replace round-trips
+            mirror_qb = 0 if comp.is_auto else int(comp.bits)
+            if self.quantize_bits not in (0, mirror_qb) or \
+                    (self.error_feedback
+                     and not comp.error_feedback):
+                raise ValueError(
+                    "FLConfig.quantize_bits/error_feedback conflict with "
+                    "compression=CompressionConfig(...); pass one "
+                    "spelling, not both")
+        else:
+            if self.error_feedback:
+                assert self.quantize_bits > 0, \
+                    "error feedback needs quantization"
+            if self.quantize_bits:
+                warnings.warn(
+                    "FLConfig(quantize_bits=..., error_feedback=...) is "
+                    "deprecated; pass compression=CompressionConfig("
+                    "bits=..., error_feedback=...) instead",
+                    DeprecationWarning, stacklevel=3)
+                comp = CompressionConfig(
+                    bits=int(self.quantize_bits),
+                    error_feedback=self.error_feedback)
+                object.__setattr__(self, "compression", comp)
+        if comp is not None:
+            # mirror: flat ints keep showing the effective width (0 for
+            # the adaptive allocator, whose width is per-round)
+            object.__setattr__(self, "quantize_bits",
+                               0 if comp.is_auto else int(comp.bits))
+            object.__setattr__(self, "error_feedback", comp.error_feedback)
+        if comp is not None and not scls.supports_quantize:
+            raise ValueError(
+                f"strategy {self.algo!r} declares supports_quantize=False "
+                "(fedadp aggregates pruned neurons, not quantized deltas)")
+
     def __post_init__(self):
         # resolve through the strategy registry: unknown algos raise a
         # ValueError listing every registered name, and per-strategy
@@ -139,23 +265,13 @@ class FLConfig:
         scls = get_strategy_cls(self.algo)
         assert self.mode in ("vmap", "scan")
         assert 1 <= self.top_n <= self.clients_per_round
-        if not 0.0 < self.fedlp_p <= 1.0:
-            raise ValueError(f"fedlp_p must be in (0, 1], got {self.fedlp_p}")
-        if self.fedlama_tau < 1 or self.fedlama_lam < 1:
-            raise ValueError(
-                f"fedlama intervals must be >= 1, got tau={self.fedlama_tau}"
-                f" lam={self.fedlama_lam}")
-        if self.quantize_bits and not scls.supports_quantize:
-            raise ValueError(
-                f"strategy {self.algo!r} declares supports_quantize=False "
-                "(fedadp aggregates pruned neurons, not quantized deltas)")
-        if self.error_feedback:
-            assert self.quantize_bits > 0, "error feedback needs quantization"
+        self._normalize_algo_options(scls)
+        self._normalize_compression(scls)
         if self.mode == "scan":
             if not scls.supports_scan:
                 raise ValueError(
                     f"strategy {self.algo!r} declares supports_scan=False")
-            if self.quantize_bits:
+            if self.compression is not None:
                 raise NotImplementedError(
                     "quantized uploads need stacked clients (mode='vmap')")
         if self.mesh is not None:
@@ -348,24 +464,6 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig,
                                                flcfg.top_n)    # (K, U), repl.
         sel_loc = local_rows(selection, ax, kloc)
 
-        if strategy.transforms_upload:
-            res_rows = (state["client"]["residual"]
-                        if strategy.tracks_residuals else None)
-            uploads, cand_res = jax.vmap(
-                lambda loc, res: strategy.transform_upload(
-                    loc, params, umap, res),
-                in_axes=(0, 0 if res_rows is not None else None),
-            )(locals_, res_rows)
-            if strategy.tracks_residuals:
-                new_rows = jax.vmap(
-                    lambda cand, old, s: strategy.update_residual(
-                        cand, old, s, umap, params),
-                    in_axes=(0, 0, 0))(cand_res, res_rows, sel_loc)
-                state = {**state, "client": {**state["client"],
-                                             "residual": new_rows}}
-        else:
-            uploads = locals_
-
         # ONE fused cross-device reduction per round: the Eq. 5 numerators/
         # denominator, the loss sum, and the (additive) comm-byte totals
         # all ride the same psum — a single rendezvous instead of one per
@@ -377,9 +475,40 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig,
         # (the two halves of their aggregate()); comm_profile is called on
         # the LOCAL selection rows, so every field but savings_frac must
         # be additive over the client axis.
-        parts, denom_loc = strategy.psum_parts(uploads, umap, sel_loc,
-                                               data_sizes,
-                                               global_params=params)
+        wire = None
+        if strategy.packed_upload:
+            # packed wire-format uplink: quantize the local client deltas
+            # into PackedPayload buffers and reduce them through the fused
+            # dequant+EF+accumulate kernel — the parts stay additive over
+            # the clients axis, so they ride the same fused psum below
+            res_rows = (state["client"]["residual"]
+                        if strategy.tracks_residuals else None)
+            parts, denom_loc, new_rows, wire = strategy.uplink_psum_parts(
+                locals_, params, umap, sel_loc, divs, data_sizes, res_rows)
+            if strategy.tracks_residuals:
+                state = {**state, "client": {**state["client"],
+                                             "residual": new_rows}}
+        else:
+            if strategy.transforms_upload:
+                res_rows = (state["client"]["residual"]
+                            if strategy.tracks_residuals else None)
+                uploads, cand_res = jax.vmap(
+                    lambda loc, res: strategy.transform_upload(
+                        loc, params, umap, res),
+                    in_axes=(0, 0 if res_rows is not None else None),
+                )(locals_, res_rows)
+                if strategy.tracks_residuals:
+                    new_rows = jax.vmap(
+                        lambda cand, old, s: strategy.update_residual(
+                            cand, old, s, umap, params),
+                        in_axes=(0, 0, 0))(cand_res, res_rows, sel_loc)
+                    state = {**state, "client": {**state["client"],
+                                                 "residual": new_rows}}
+            else:
+                uploads = locals_
+            parts, denom_loc = strategy.psum_parts(uploads, umap, sel_loc,
+                                                   data_sizes,
+                                                   global_params=params)
         if m > 1:
             parts = tree_shard_slice(parts, pspecs, m, MODEL_AXIS)
             # a param-structured denominator (element-wise aggregation,
@@ -388,7 +517,13 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig,
             if jax.tree.structure(denom_loc) == jax.tree.structure(parts):
                 denom_loc = tree_shard_slice(denom_loc, pspecs, m,
                                              MODEL_AXIS)
-        comm_loc = strategy.comm_profile(sel_loc, umap)
+        if wire is not None:
+            # charge the packed payload's actual wire bytes (bit-width
+            # vector + headers), not fp32 unit sizes
+            comm_loc = strategy.comm_profile(
+                sel_loc, umap, unit_bytes_override=wire["unit_bytes"])
+        else:
+            comm_loc = strategy.comm_profile(sel_loc, umap)
         comm_add = {n_: v for n_, v in comm_loc.items()
                     if n_ != "savings_frac"}   # byte counts are additive
         # telemetry taps: the client-state squared-norm partials (EF
@@ -424,7 +559,10 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig,
             # from the device-local rows.
             metrics["taps"] = taps_mod.collect(
                 strategy, state, selection, divs, umap,
-                client_sq=tap_client_sq if tap_client_sq is not None else {})
+                client_sq=tap_client_sq if tap_client_sq is not None else {},
+                extra=(None if wire is None else
+                       {"wire_unit_bytes": wire["unit_bytes"],
+                        "wire_bits": wire["bits"]}))
         if state is not None:
             if m > 1:
                 state = _state_model_slice(state, sspecs, m)
@@ -490,32 +628,50 @@ def build_round_vmap(loss_fn, umap: UnitMap, flcfg: FLConfig,
         selection = strategy.select_with_state(state, divs, key, k,
                                                umap.num_units, flcfg.top_n)
 
-        if strategy.transforms_upload:
-            # e.g. quantized deltas: the server reconstructs
-            # Ĝ + dequant(Q(Δ + e)) for uploaded layers; error feedback
-            # residuals update only where a layer was actually uploaded
-            # (s[k,u] = 1). The residual rows ride the state seam as the
-            # client entry named "residual" (see FLStrategy.init_state).
+        wire = None
+        if strategy.packed_upload:
+            # packed wire-format uplink: the strategy quantizes the client
+            # deltas into PackedPayload buffers and reduces them through
+            # the fused dequant+EF+accumulate kernel in one shot
             res_rows = (state["client"]["residual"]
                         if strategy.tracks_residuals else None)
-            uploads, cand_res = jax.vmap(
-                lambda loc, res: strategy.transform_upload(
-                    loc, params, umap, res),
-                in_axes=(0, 0 if res_rows is not None else None),
-            )(locals_, res_rows)
+            new_params, new_rows, wire = strategy.uplink_round(
+                locals_, params, umap, selection, divs, data_sizes,
+                res_rows)
             if strategy.tracks_residuals:
-                new_rows = jax.vmap(
-                    lambda cand, old, s: strategy.update_residual(
-                        cand, old, s, umap, params),
-                    in_axes=(0, 0, 0))(cand_res, res_rows, selection)
                 state = {**state, "client": {**state["client"],
                                              "residual": new_rows}}
         else:
-            uploads = locals_
-
-        new_params = strategy.aggregate(uploads, umap, selection,
-                                        data_sizes, params)
-        comm = strategy.comm_profile(selection, umap)
+            if strategy.transforms_upload:
+                # e.g. quantized deltas: the server reconstructs
+                # Ĝ + dequant(Q(Δ + e)) for uploaded layers; error
+                # feedback residuals update only where a layer was
+                # actually uploaded (s[k,u] = 1). The residual rows ride
+                # the state seam as the client entry named "residual"
+                # (see FLStrategy.init_state).
+                res_rows = (state["client"]["residual"]
+                            if strategy.tracks_residuals else None)
+                uploads, cand_res = jax.vmap(
+                    lambda loc, res: strategy.transform_upload(
+                        loc, params, umap, res),
+                    in_axes=(0, 0 if res_rows is not None else None),
+                )(locals_, res_rows)
+                if strategy.tracks_residuals:
+                    new_rows = jax.vmap(
+                        lambda cand, old, s: strategy.update_residual(
+                            cand, old, s, umap, params),
+                        in_axes=(0, 0, 0))(cand_res, res_rows, selection)
+                    state = {**state, "client": {**state["client"],
+                                                 "residual": new_rows}}
+            else:
+                uploads = locals_
+            new_params = strategy.aggregate(uploads, umap, selection,
+                                            data_sizes, params)
+        if wire is not None:
+            comm = strategy.comm_profile(
+                selection, umap, unit_bytes_override=wire["unit_bytes"])
+        else:
+            comm = strategy.comm_profile(selection, umap)
         metrics = {"loss": losses.mean(), "comm": comm,
                    "selection": selection}
         if state is not None:
@@ -526,7 +682,10 @@ def build_round_vmap(loss_fn, umap: UnitMap, flcfg: FLConfig,
             # post-residual-update values (update_state preserves entries
             # it does not own), matching the mesh engine's tap timing.
             metrics["taps"] = taps_mod.collect(
-                strategy, metrics.get("state"), selection, divs, umap)
+                strategy, metrics.get("state"), selection, divs, umap,
+                extra=(None if wire is None else
+                       {"wire_unit_bytes": wire["unit_bytes"],
+                        "wire_bits": wire["bits"]}))
         return new_params, metrics
 
     return round_fn
@@ -545,7 +704,8 @@ def build_round_scan(loss_fn, umap: UnitMap, flcfg: FLConfig,
     in vmap mode — O(K) parameter memory, but still O(1) activation
     memory, which is the scan engine's binding constraint for deep models.
     """
-    if flcfg.quantize_bits:
+    if getattr(flcfg, "compression", None) is not None or \
+            getattr(flcfg, "quantize_bits", 0):
         raise NotImplementedError(
             "quantized uploads need stacked clients (vmap mode)")
     strategy = make_strategy(flcfg)
@@ -695,6 +855,11 @@ def _run_meta(flcfg: FLConfig, *, driver: str, umap: UnitMap, seed: int,
             "clients_per_round": flcfg.clients_per_round,
             "top_n": flcfg.top_n,
             "quantize_bits": flcfg.quantize_bits,
+            "compression": (None if flcfg.compression is None else
+                            {"bits": flcfg.compression.bits,
+                             "error_feedback":
+                                 flcfg.compression.error_feedback,
+                             "fused": flcfg.compression.fused}),
             "mesh": (dict(mesh.shape) if mesh is not None else None),
             "units": list(umap.names),
             "unit_bytes": [float(b) for b in np.asarray(umap.unit_bytes)]}

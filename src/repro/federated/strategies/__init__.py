@@ -23,18 +23,27 @@ from repro.federated.strategies.base import (FLStrategy, get_strategy_cls,
                                              unregister_strategy)
 from repro.federated.strategies import builtin  # noqa: F401  (registers)
 from repro.federated.strategies import fedlama  # noqa: F401  (registers)
+from repro.federated.strategies.builtin import FedADPOptions, FedLPOptions
 from repro.federated.strategies.compression import QuantizedUpload
+from repro.federated.strategies.fedlama import FedLAMAOptions
 
-__all__ = ["FLStrategy", "QuantizedUpload", "get_strategy_cls",
-           "make_strategy", "register_strategy", "registered_algos",
-           "strategy_registry", "unregister_strategy"]
+__all__ = ["FLStrategy", "FedADPOptions", "FedLAMAOptions", "FedLPOptions",
+           "QuantizedUpload", "get_strategy_cls", "make_strategy",
+           "register_strategy", "registered_algos", "strategy_registry",
+           "unregister_strategy"]
 
 
 def make_strategy(flcfg) -> FLStrategy:
     """Resolve ``flcfg.algo`` and compose the quantize(+EF) wrapper when
-    ``flcfg.quantize_bits`` is set. The engines call this once per round
-    builder; the result is stateless and jit-closure-safe."""
+    ``flcfg.compression`` (or the deprecated ``flcfg.quantize_bits``) is
+    set. The engines call this once per round builder; the result is
+    stateless and jit-closure-safe."""
     strat = get_strategy_cls(flcfg.algo)(flcfg)
-    if flcfg.quantize_bits:
+    comp = getattr(flcfg, "compression", None)
+    if comp is not None:
+        strat = QuantizedUpload(strat, flcfg, comp)
+    elif getattr(flcfg, "quantize_bits", 0):
+        # duck-typed legacy cfg (FLConfig itself normalizes the flat
+        # knobs into .compression in __post_init__)
         strat = QuantizedUpload(strat, flcfg)
     return strat

@@ -33,13 +33,24 @@ flow on traced values, no host callbacks, static shapes only):
   (additive local partials, then a replicated epilogue). The defaults
   implement Eq. 5; a strategy that overrides :meth:`aggregate` must either
   declare ``supports_mesh = False`` or override these to match.
-- ``comm_profile(selection, umap, param_bytes_override=None) -> dict`` —
-  per-round communication accounting. Must preserve the ledger invariant
+- ``comm_profile(selection, umap, param_bytes_override=None,
+  unit_bytes_override=None) -> dict`` — per-round communication
+  accounting. Must preserve the ledger invariant
   ``uplink_payload + uplink_feedback == uplink_total`` (tested for every
   registered strategy). Inside the sharded round it is called on the
   *local* selection rows and every field except ``savings_frac`` must be
   additive across devices (the engine psums them and recomputes
-  ``savings_frac``).
+  ``savings_frac``). ``unit_bytes_override`` carries the packed wire
+  format's per-unit byte vector (``PackedPayload.unit_wire_bytes``) and
+  takes precedence over the legacy uniform repricing.
+- ``uplink_round`` / ``uplink_psum_parts`` — the packed-uplink fast path,
+  consulted only when :attr:`packed_upload` is set: the strategy turns
+  the stacked client locals directly into a packed wire payload
+  (``core/wire``) and reduces it through the fused dequant+EF+Eq. 5
+  kernel (``kernels/uplink``), never materialising per-client fp32
+  reconstructions. ``uplink_round`` returns the finished global model
+  (single-device round); ``uplink_psum_parts`` returns additive partials
+  for the mesh engine's fused psum, finalized by ``psum_finalize``.
 
 **Cross-round state seam** (optional; all three engines thread it):
 
@@ -90,7 +101,7 @@ the engines):
 - ``supports_mesh`` — the strategy can run client-sharded over a device
   mesh (requires Eq. 5 ``psum_parts``/``psum_finalize`` or overrides).
 - ``supports_quantize`` — the quantize(+EF) wrapper may be composed on
-  top (``FLConfig(quantize_bits=...)``).
+  top (``FLConfig(compression=CompressionConfig(...))``).
 - ``eq5_weighted`` — aggregation is exactly Eq. 5 over the selection
   matrix, so the engines may execute it as a streaming accumulation
   (scan) or a fused-psum partial reduction (mesh). Set it to ``False``
@@ -121,6 +132,9 @@ class FLStrategy:
 
     # registry name; filled in by @register_strategy
     name: str = "?"
+    # per-strategy options dataclass accepted via FLConfig(algo_options=...)
+    # (None = the strategy has no knobs beyond the shared FLConfig fields)
+    options_cls: Optional[type] = None
     # ---- capability flags (see module docstring) ----
     needs_divergence: bool = False
     supports_scan: bool = True
@@ -130,9 +144,35 @@ class FLStrategy:
     # ---- engine dispatch flags ----
     transforms_upload: bool = False
     tracks_residuals: bool = False
+    # packed wire-format uplink: the engines route the whole
+    # locals→payload→aggregate reduction through uplink_round /
+    # uplink_psum_parts instead of transform_upload + aggregate
+    packed_upload: bool = False
 
     def __init__(self, cfg):
         self.cfg = cfg   # the FLConfig (duck-typed; strategies read knobs)
+        self.opts = self.resolve_options(cfg)
+
+    @classmethod
+    def resolve_options(cls, cfg):
+        """The strategy's options instance for ``cfg``.
+
+        ``FLConfig`` normalizes ``algo_options`` in ``__post_init__`` (flat
+        deprecated knobs are folded in there), so this usually just reads
+        ``cfg.algo_options``. Duck-typed cfgs without the field fall back
+        to the options defaults. Returns ``None`` when the strategy
+        declares no :attr:`options_cls`.
+        """
+        if cls.options_cls is None:
+            return None
+        opts = getattr(cfg, "algo_options", None)
+        if opts is None:
+            return cls.options_cls()
+        if not isinstance(opts, cls.options_cls):
+            raise TypeError(
+                f"algo_options for strategy {cls.name!r} must be "
+                f"{cls.options_cls.__name__}, got {type(opts).__name__}")
+        return opts
 
     # ---- cross-round state seam (see module docstring) ----
     def init_state(self, params: Pytree, num_clients: int,
@@ -220,12 +260,44 @@ class FLStrategy:
         return agg.stacked_psum_finalize(parts, denom, umap, params_shard,
                                          fallback)
 
+    # ---- packed-uplink fast path (only when packed_upload is set) ----
+    def uplink_round(self, locals_: Pytree, global_params: Pytree,
+                     umap: UnitMap, selection: jnp.ndarray,
+                     divs: Optional[jnp.ndarray], data_sizes: jnp.ndarray,
+                     res_rows: Optional[Pytree]
+                     ) -> tuple[Pytree, Optional[Pytree], dict]:
+        """Single-device packed round: stacked client ``locals_`` →
+        ``(new_global_params, new_residual_rows, wire)`` where ``wire`` is
+        ``{"unit_bytes": (U,), "bits": (U,), "nbytes": int}`` — the packed
+        payload's accounting, fed to :meth:`comm_profile` via
+        ``unit_bytes_override``."""
+        raise NotImplementedError(
+            f"{type(self).__name__} sets packed_upload but does not "
+            "implement uplink_round")
+
+    def uplink_psum_parts(self, locals_: Pytree, global_params: Pytree,
+                          umap: UnitMap, sel_loc: jnp.ndarray,
+                          divs: Optional[jnp.ndarray],
+                          data_sizes: jnp.ndarray,
+                          res_rows: Optional[Pytree]
+                          ) -> tuple[Pytree, jnp.ndarray,
+                                     Optional[Pytree], dict]:
+        """Mesh half of :meth:`uplink_round`: additive Eq. 5 numerator
+        partials + local denominator (for the engine's fused psum, then
+        :meth:`psum_finalize`), plus the local residual rows and wire
+        accounting."""
+        raise NotImplementedError(
+            f"{type(self).__name__} sets packed_upload but does not "
+            "implement uplink_psum_parts")
+
     # ------------------------------------------------------------------
     def comm_profile(self, selection: jnp.ndarray, umap: UnitMap,
-                     param_bytes_override: float | None = None) -> dict:
+                     param_bytes_override: float | None = None,
+                     unit_bytes_override: jnp.ndarray | None = None) -> dict:
         return comm_mod.round_comm(
             selection, umap, divergence_feedback=self.needs_divergence,
-            param_bytes_override=param_bytes_override)
+            param_bytes_override=param_bytes_override,
+            unit_bytes_override=unit_bytes_override)
 
     # ---- telemetry taps (observability; jit-safe like every hook) ----
     # global-state entries at most this many elements are passed through

@@ -8,12 +8,43 @@ pinned by the fixed-seed equivalence tests).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax.numpy as jnp
 
 from repro.core import comm as comm_mod
 from repro.core import fedadp as fedadp_mod
 from repro.core import selection as sel
 from repro.federated.strategies.base import FLStrategy, register_strategy
+
+
+# ----------------------------------------------------------------------
+# Per-strategy options (``FLConfig(algo_options=...)``). Validation lives
+# here, next to the knob's owner, instead of in FLConfig.__post_init__;
+# the deprecated flat FLConfig fields (fedadp_keep, fedlp_p, ...) are
+# folded into these by FLConfig's normalization shim.
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FedADPOptions:
+    """FedADP knobs: ``keep`` — the neuron keep fraction (equal-comm
+    setting vs FedLDF's n/K)."""
+    keep: float = 0.2
+
+    def __post_init__(self):
+        if not 0.0 < self.keep <= 1.0:
+            raise ValueError(
+                f"fedadp keep fraction must be in (0, 1], got {self.keep}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FedLPOptions:
+    """FedLP knobs: ``p`` — per-layer keep probability."""
+    p: float = 0.5
+
+    def __post_init__(self):
+        if not 0.0 < self.p <= 1.0:
+            raise ValueError(
+                f"fedlp_p must be in (0, 1], got {self.p}")
 
 
 @register_strategy("fedldf")
@@ -64,6 +95,7 @@ class FedADP(FLStrategy):
     tree (not the Eq. 5 ``(U,)`` vector), which the engine 'model'-axis
     shards alongside the numerators on 2-D meshes."""
 
+    options_cls = FedADPOptions
     eq5_weighted = False        # element-wise masks, not unit weights
     supports_quantize = False   # aggregates pruned neurons, not deltas
 
@@ -78,7 +110,7 @@ class FedADP(FLStrategy):
             "the mesh engine uses psum_parts/psum_finalize"
         return fedadp_mod.aggregate_fedadp(uploads, global_params,
                                            data_sizes,
-                                           self.cfg.fedadp_keep)
+                                           self.opts.keep)
 
     # ---- mesh halves: per-leaf additive masked partials ----
     def psum_parts(self, uploads, umap, sel_loc, data_sizes,
@@ -87,22 +119,23 @@ class FedADP(FLStrategy):
             "fedadp psum_parts needs the global model for its masks"
         return fedadp_mod.fedadp_psum_parts(uploads, global_params,
                                             data_sizes,
-                                            self.cfg.fedadp_keep)
+                                            self.opts.keep)
 
     def psum_finalize(self, parts, denom, umap, params_shard, fallback):
         return fedadp_mod.fedadp_psum_finalize(parts, denom, fallback)
 
-    def comm_profile(self, selection, umap, param_bytes_override=None):
+    def comm_profile(self, selection, umap, param_bytes_override=None,
+                     unit_bytes_override=None):
         comm = comm_mod.round_comm(selection, umap,
                                    divergence_feedback=False)
         # overwrite with FedADP's own accounting. The payload must be
         # recomputed alongside the total, or the metrics dict goes
         # internally inconsistent (payload + feedback != total).
         comm["uplink_total"] = jnp.float32(0.0) + comm["fedavg_uplink"] \
-            * self.cfg.fedadp_keep
+            * self.opts.keep
         comm["uplink_payload"] = comm["uplink_total"] \
             - comm["uplink_feedback"]
-        comm["savings_frac"] = 1.0 - self.cfg.fedadp_keep
+        comm["savings_frac"] = 1.0 - self.opts.keep
         return comm
 
 
@@ -110,7 +143,7 @@ class FedADP(FLStrategy):
 class FedLP(FLStrategy):
     """FedLP (Zhu et al., arXiv:2303.06360): layer-wise probabilistic
     participation. Each client independently keeps (uploads) each
-    layer-unit with probability ``FLConfig.fedlp_p``; the server runs the
+    layer-unit with probability ``FedLPOptions.p``; the server runs the
     usual Eq. 5 weighted mean over whatever arrived, falling back to the
     previous global value for units nobody kept. Expected uplink is
     ``p × FedAvg`` with zero feedback traffic — the comm profile adds only
@@ -121,13 +154,17 @@ class FedLP(FLStrategy):
     vmap, scan (streaming), mesh-sharded, and quantized uploads all work.
     """
 
-    def select(self, divs, key, k, u, n):
-        return sel.bernoulli_per_layer(key, k, u, self.cfg.fedlp_p)
+    options_cls = FedLPOptions
 
-    def comm_profile(self, selection, umap, param_bytes_override=None):
+    def select(self, divs, key, k, u, n):
+        return sel.bernoulli_per_layer(key, k, u, self.opts.p)
+
+    def comm_profile(self, selection, umap, param_bytes_override=None,
+                     unit_bytes_override=None):
         stats = comm_mod.round_comm(
             selection, umap, divergence_feedback=False,
-            param_bytes_override=param_bytes_override)
+            param_bytes_override=param_bytes_override,
+            unit_bytes_override=unit_bytes_override)
         # keep-mask header: U bits per participating client, byte-padded.
         # Additive in the client axis, so the sharded engine's psum over
         # local rows sums to the global header cost.

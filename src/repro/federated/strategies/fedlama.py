@@ -5,8 +5,8 @@ global model at very different rates, and that most of the communication
 budget is spent re-synchronising layers that have barely moved. FedLAMA
 therefore aggregates each layer on its *own* interval: layers whose
 accumulated discrepancy-per-byte is low are synchronised every
-``λ·τ'`` rounds instead of every ``τ'`` rounds (``FLConfig.fedlama_tau``
-= τ', ``FLConfig.fedlama_lam`` = λ).
+``λ·τ'`` rounds instead of every ``τ'`` rounds
+(``FedLAMAOptions(tau=τ', lam=λ)`` via ``FLConfig(algo_options=...)``).
 
 This is the first genuinely *stateful* strategy in the registry — it is
 the proof workload of the cross-round state seam
@@ -42,10 +42,26 @@ high-drift layers still synchronise every τ' rounds.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax.numpy as jnp
 
 from repro.core.units import UnitMap
 from repro.federated.strategies.base import FLStrategy, register_strategy
+
+
+@dataclasses.dataclass(frozen=True)
+class FedLAMAOptions:
+    """FedLAMA knobs: base aggregation interval ``tau`` (τ') and the
+    long-interval multiplier ``lam`` (λ)."""
+    tau: int = 2
+    lam: int = 2
+
+    def __post_init__(self):
+        if self.tau < 1 or self.lam < 1:
+            raise ValueError(
+                f"fedlama intervals must be >= 1, got tau={self.tau}"
+                f" lam={self.lam}")
 
 
 @register_strategy("fedlama")
@@ -53,12 +69,13 @@ class FedLAMA(FLStrategy):
     """Layer-wise adaptive aggregation intervals, driven by per-layer
     discrepancy accumulated across rounds in strategy state."""
 
+    options_cls = FedLAMAOptions
     needs_divergence = True   # d_u comes from the engine's Eq. 3 matrix
 
     # ------------------------------------------------------------------
     def init_state(self, params, num_clients, mesh=None):
         u = UnitMap.build(params).num_units
-        tau = float(self.cfg.fedlama_tau)
+        tau = float(self.opts.tau)
         return {"global": {
             "ttl": jnp.zeros((u,), jnp.float32),        # round 0: full sync
             "interval": jnp.full((u,), tau, jnp.float32),
@@ -84,8 +101,8 @@ class FedLAMA(FLStrategy):
         """Alg.-2 cutoff: τ_u = λτ' for low-discrepancy-per-byte units,
         τ' for the rest. Falls back to τ' everywhere while no discrepancy
         has been observed yet (round 0)."""
-        tau = jnp.float32(self.cfg.fedlama_tau)
-        lam = jnp.float32(self.cfg.fedlama_lam)
+        tau = jnp.float32(self.opts.tau)
+        lam = jnp.float32(self.opts.lam)
         z = umap.unit_bytes_array()                       # (U,) bytes
         delta = disc / z                                  # drift per byte
         order = jnp.argsort(delta)                        # ascending

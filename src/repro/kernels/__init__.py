@@ -3,6 +3,8 @@
 FedLDF hot spots:
 - divergence.py : per-row Σ(a−b)² (Eq. 3 inner reduction), VMEM-tiled.
 - aggregate.py  : fused acc += w[r]·x (Eq. 5 accumulation).
+- uplink.py     : fused packed-uplink dequant + EF update + Eq. 5
+                  accumulate over int8 wire buffers (core/wire.py).
 
 Substrate hot spot (motivated by §Perf pairs A/E — XLA keeps flash
 probabilities in HBM; the fused kernel keeps them in VMEM):
@@ -11,6 +13,8 @@ probabilities in HBM; the fused kernel keeps them in VMEM):
 - ref.py : pure-jnp oracles (ground truth + CPU fast path).
 - ops.py : backend-dispatching wrappers used by repro.core.
 """
-from repro.kernels import aggregate, divergence, flash_attention, ops, ref
+from repro.kernels import (aggregate, divergence, flash_attention, ops, ref,
+                           uplink)
 
-__all__ = ["aggregate", "divergence", "flash_attention", "ops", "ref"]
+__all__ = ["aggregate", "divergence", "flash_attention", "ops", "ref",
+           "uplink"]

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.kernels import aggregate as _aggregate
 from repro.kernels import divergence as _divergence
 from repro.kernels import ref as _ref
+from repro.kernels import uplink as _uplink
 
 
 def _use_pallas() -> bool:
@@ -47,3 +48,23 @@ def masked_accumulate(acc: jnp.ndarray, x: jnp.ndarray,
     if _use_pallas():
         return _aggregate.masked_accumulate(acc, x, w, interpret=_interpret())
     return _ref.masked_accumulate(acc, x, w)
+
+
+def fused_uplink(levels: jnp.ndarray, scales: jnp.ndarray,
+                 w: jnp.ndarray) -> jnp.ndarray:
+    """(K,R,C) int levels, (K,R), (K,R) -> (R,C) f32 Eq. 5 numerator."""
+    if _use_pallas():
+        return _uplink.fused_uplink(levels, scales, w,
+                                    interpret=_interpret())
+    return _ref.fused_uplink(levels, scales, w)
+
+
+def fused_uplink_ef(levels: jnp.ndarray, scales: jnp.ndarray,
+                    w: jnp.ndarray, gate: jnp.ndarray, v: jnp.ndarray,
+                    e_old: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused dequant + Eq. 5 numerator + EF residual update.
+    -> (num (R,C), new_res (K,R,C)) f32."""
+    if _use_pallas():
+        return _uplink.fused_uplink_ef(levels, scales, w, gate, v, e_old,
+                                       interpret=_interpret())
+    return _ref.fused_uplink_ef(levels, scales, w, gate, v, e_old)

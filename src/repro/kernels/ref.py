@@ -26,3 +26,30 @@ def masked_accumulate(acc: jnp.ndarray, x: jnp.ndarray,
     w: (R,) per-row (per layer-unit) weight. Returns (R, C) float32.
     """
     return acc + w.astype(jnp.float32)[:, None] * x.astype(jnp.float32)
+
+
+def fused_uplink(levels: jnp.ndarray, scales: jnp.ndarray,
+                 w: jnp.ndarray) -> jnp.ndarray:
+    """Σ_k w[k,r]·scales[k,r]·levels[k,r,:] — dequant + Eq. 5 numerator.
+
+    levels: (K, R, C) int levels; scales, w: (K, R). Returns (R, C) float32.
+    """
+    recon = levels.astype(jnp.float32) * scales.astype(jnp.float32)[..., None]
+    return jnp.einsum("kr,krc->rc", w.astype(jnp.float32), recon)
+
+
+def fused_uplink_ef(levels: jnp.ndarray, scales: jnp.ndarray,
+                    w: jnp.ndarray, gate: jnp.ndarray, v: jnp.ndarray,
+                    e_old: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused dequant + Eq. 5 numerator + error-feedback residual update.
+
+    levels: (K, R, C); scales, w, gate: (K, R); v (=Δ+e), e_old: (K, R, C).
+    Returns (num (R, C), new_res (K, R, C)) float32 with
+    ``new_res = gate·(v − recon) + (1−gate)·e_old``.
+    """
+    recon = levels.astype(jnp.float32) * scales.astype(jnp.float32)[..., None]
+    num = jnp.einsum("kr,krc->rc", w.astype(jnp.float32), recon)
+    g = gate.astype(jnp.float32)[..., None]
+    res = (g * (v.astype(jnp.float32) - recon)
+           + (1.0 - g) * e_old.astype(jnp.float32))
+    return num, res

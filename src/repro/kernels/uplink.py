@@ -1,0 +1,163 @@
+"""Pallas TPU kernel: fused packed-uplink dequant + EF update + Eq. 5 accumulate.
+
+The per-round hot loop used to run as separate XLA ops over fp32 buffers:
+dequantize each client's levels, rebuild Θ̂, update the error-feedback
+residual, then weighted-accumulate into the Eq. 5 numerator — four full
+HBM passes over K × (model size).  This kernel consumes the **packed wire
+format directly** (int8 level buffers from ``core/wire``) and does all of
+it in one pass per (Rb, Cb) tile:
+
+    recon      = levels[k] · scale[k]                  (dequant, in VMEM)
+    num       += w[k] · recon                          (Eq. 5 numerator)
+    res'[k]    = gate[k]·(v[k] − recon) + (1−gate[k])·e[k]   (EF update)
+
+Client axis K is the **minor-most grid dimension**, so the (Rb, Cb)
+numerator block is revisited across consecutive k steps and accumulated
+in-place (the ``divergence.py`` reduction idiom); the residual output block
+is written exactly once per (k, i, j).
+
+Blocks default to (32, 2048): int8 operands need (32, 128)-aligned tiles
+(fp32 only needs (8, 128)), and one int8 + four fp32 blocks ≈ 0.6 MiB —
+comfortable in the ~16 MiB VMEM budget.
+
+``interpret=None`` resolves via the backend check in ``kernels/ops``
+(compiled on TPU, interpret elsewhere); ``kernels/ref.py`` holds the
+pure-jnp oracle that doubles as the CPU fast path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_R = 32
+DEFAULT_BLOCK_C = 2048
+
+
+def _uplink_kernel(lvl_ref, s_ref, w_ref, num_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        num_ref[...] = jnp.zeros_like(num_ref)
+
+    recon = lvl_ref[0].astype(jnp.float32) * s_ref[0]  # (Rb,Cb)·(Rb,1)
+    num_ref[...] += w_ref[0] * recon
+
+
+def _uplink_ef_kernel(lvl_ref, s_ref, w_ref, g_ref, v_ref, e_ref,
+                      num_ref, res_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        num_ref[...] = jnp.zeros_like(num_ref)
+
+    recon = lvl_ref[0].astype(jnp.float32) * s_ref[0]
+    num_ref[...] += w_ref[0] * recon
+    g = g_ref[0]
+    res_ref[0] = (g * (v_ref[0].astype(jnp.float32) - recon)
+                  + (1.0 - g) * e_ref[0].astype(jnp.float32))
+
+
+def _padded(levels, rowvecs, mats, block_r, block_c):
+    """Zero-pad (K,R,C) operands and (K,R) row vectors to block multiples.
+    Zero pads are exact: w=0 rows add nothing to num, gate=0 rows copy the
+    zero-padded residual through."""
+    k, r, c = levels.shape
+    rp = pl.cdiv(r, block_r) * block_r
+    cp = pl.cdiv(c, block_c) * block_c
+    if (rp, cp) != (r, c):
+        levels = jnp.pad(levels, ((0, 0), (0, rp - r), (0, cp - c)))
+        mats = [jnp.pad(m, ((0, 0), (0, rp - r), (0, cp - c))) for m in mats]
+        rowvecs = [jnp.pad(v, ((0, 0), (0, rp - r))) for v in rowvecs]
+    rowvecs = [v.reshape(k, rp, 1) for v in rowvecs]
+    return levels, rowvecs, mats, rp, cp
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_r", "block_c", "interpret"))
+def fused_uplink(levels: jnp.ndarray, scales: jnp.ndarray, w: jnp.ndarray, *,
+                 block_r: int = DEFAULT_BLOCK_R,
+                 block_c: int = DEFAULT_BLOCK_C,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """Σ_k w[k,r]·scales[k,r]·levels[k,r,:] in one pass over packed levels.
+
+    levels: (K, R, C) int levels; scales, w: (K, R) → num (R, C) f32.
+    """
+    if interpret is None:
+        from repro.kernels import ops
+        interpret = ops._interpret()
+    kk, r, c = levels.shape
+    assert scales.shape == (kk, r) and w.shape == (kk, r)
+    block_r = min(block_r, max(32, r))
+    block_c = min(block_c, max(128, c))
+    levels, (s2, w2), _, rp, cp = _padded(levels, [scales, w], [],
+                                          block_r, block_c)
+    grid = (rp // block_r, cp // block_c, kk)
+    num = pl.pallas_call(
+        _uplink_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_r, block_c), lambda i, j, k: (k, i, j)),
+            pl.BlockSpec((1, block_r, 1), lambda i, j, k: (k, i, 0)),
+            pl.BlockSpec((1, block_r, 1), lambda i, j, k: (k, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, block_c), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rp, cp), jnp.float32),
+        interpret=interpret,
+    )(levels, s2, w2)
+    return num[:r, :c]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_r", "block_c", "interpret"))
+def fused_uplink_ef(levels: jnp.ndarray, scales: jnp.ndarray,
+                    w: jnp.ndarray, gate: jnp.ndarray, v: jnp.ndarray,
+                    e_old: jnp.ndarray, *,
+                    block_r: int = DEFAULT_BLOCK_R,
+                    block_c: int = DEFAULT_BLOCK_C,
+                    interpret: bool | None = None
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused dequant + Eq. 5 accumulate + error-feedback residual update.
+
+    levels: (K, R, C); scales, w, gate: (K, R); v (=Δ+e) and e_old: (K, R, C)
+    → (num (R, C) f32, new_res (K, R, C) f32) where
+    ``new_res = gate·(v − recon) + (1−gate)·e_old``.
+    """
+    if interpret is None:
+        from repro.kernels import ops
+        interpret = ops._interpret()
+    kk, r, c = levels.shape
+    assert scales.shape == (kk, r) and w.shape == (kk, r)
+    assert gate.shape == (kk, r) and v.shape == (kk, r, c)
+    assert e_old.shape == (kk, r, c)
+    block_r = min(block_r, max(32, r))
+    block_c = min(block_c, max(128, c))
+    levels, (s2, w2, g2), (v_, e_), rp, cp = _padded(
+        levels, [scales, w, gate], [v, e_old], block_r, block_c)
+    grid = (rp // block_r, cp // block_c, kk)
+    num, res = pl.pallas_call(
+        _uplink_ef_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_r, block_c), lambda i, j, k: (k, i, j)),
+            pl.BlockSpec((1, block_r, 1), lambda i, j, k: (k, i, 0)),
+            pl.BlockSpec((1, block_r, 1), lambda i, j, k: (k, i, 0)),
+            pl.BlockSpec((1, block_r, 1), lambda i, j, k: (k, i, 0)),
+            pl.BlockSpec((1, block_r, block_c), lambda i, j, k: (k, i, j)),
+            pl.BlockSpec((1, block_r, block_c), lambda i, j, k: (k, i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_r, block_c), lambda i, j, k: (i, j)),
+            pl.BlockSpec((1, block_r, block_c), lambda i, j, k: (k, i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rp, cp), jnp.float32),
+            jax.ShapeDtypeStruct((kk, rp, cp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(levels, s2, w2, g2, v_, e_)
+    return num[:r, :c], res[:, :r, :c]

@@ -46,13 +46,17 @@ def client_sqsums(client: dict) -> dict:
 
 
 def collect(strategy, state: Optional[dict], selection, divs, umap,
-            client_sq: Optional[dict] = None) -> dict:
+            client_sq: Optional[dict] = None,
+            extra: Optional[dict] = None) -> dict:
     """Build one round's tap dict (see module docstring).
 
     ``state`` is the round-local post-``update_state`` view (client rows
     included off-mesh). ``client_sq`` carries pre-reduced client partials
     when the caller already psum'd them (the mesh engine); ``None`` means
-    compute them here from ``state['client']``.
+    compute them here from ``state['client']``. ``extra`` merges
+    engine-side taps that no hook can see — e.g. the packed uplink's
+    per-unit wire bytes and bit-width allocation (replicated values; keys
+    must be static across rounds like every tap).
     """
     gview = None
     if state and state.get("global"):
@@ -63,4 +67,6 @@ def collect(strategy, state: Optional[dict], selection, divs, umap,
     if client_sq:
         for name, sq in client_sq.items():
             taps[f"state_{name}_norm"] = jnp.sqrt(sq)
+    if extra:
+        taps.update(extra)
     return taps

@@ -10,6 +10,8 @@ from benchmarks.trendline import (WINDOW, compare, extract, main,
 
 BENCH = {
     "ci": True,
+    "kernel": {"rows": [["divergence_jnp", 1.0, "x"]],
+               "uplink_fused_speedup": 2.0},
     "engine": {"mode": "floor", "host_rate": 50.0, "scan_rate": 200.0,
                "speedup": 4.0},
     "shard": {"unsharded": 40.0, "speedup": 1.5,
@@ -25,6 +27,7 @@ def test_extract_flattens_tracked_metrics():
     assert got["shard.speedup"] == 1.5
     assert got["shard.mesh.8"] == 60.0
     assert got["shard.model_mesh.rate"] == 30.0
+    assert got["kernel.uplink_fused_speedup"] == 2.0
     assert "ci" not in got
 
 
@@ -34,6 +37,14 @@ def test_extract_tolerates_missing_sections():
         "engine.scan_rate": 1.0}
     # non-numeric junk is skipped, not crashed on
     assert extract({"shard": {"speedup": "n/a", "mesh": {"2": None}}}) == {}
+
+
+def test_extract_tolerates_pre_wire_kernel_list():
+    # pre-wire BENCH_ci artifacts stored [kernel] as a CSV row list; old
+    # history in the trendline window must not crash the gate
+    old = {"kernel": [["divergence_jnp", 1.0, "x"]],
+           "engine": {"scan_rate": 5.0}}
+    assert extract(old) == {"engine.scan_rate": 5.0}
 
 
 def test_compare_flags_only_large_drops():
