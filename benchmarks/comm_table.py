@@ -69,10 +69,41 @@ def run(out=sys.stdout, rounds: int = 1000):
                        unit_bytes_override=packed_auto)
     rows.append(("fedldf_qauto4_packed", float(stats["uplink_total"])))
 
+    # ---- adapter-only uplink (trainable-partition workload) ----
+    # Savings here are measured against the *transformer's own* full-model
+    # FedAvg upload (fedavg_lora_full), not the VGG-9 baseline above —
+    # different model, separate reference.
+    from repro.configs import get_config
+    from repro.models import transformer as tfm
+    from repro.models.lora import inject_lora, lora_partition
+
+    lcfg = get_config("qwen3-1.7b").reduced()
+    lparams = inject_lora(jax.random.PRNGKey(1),
+                          tfm.init_params(jax.random.PRNGKey(0), lcfg),
+                          rank=4)
+    trainable, _ = lora_partition(lparams).split(lparams)
+    lumap = UnitMap.build(trainable)
+    full_up = float(k * sum(l.size * l.dtype.itemsize
+                            for l in jax.tree.leaves(lparams)))
+    ln = max(1, round(lumap.num_units * n / 20))  # paper's n/K ratio
+    lmask = sel.topn_divergence(
+        jax.random.uniform(key, (k, lumap.num_units)), ln)
+    stats = round_comm(lmask, lumap, divergence_feedback=True)
+    lora_rows = [("fedavg_lora_full", full_up),
+                 ("fedldf_lora", float(stats["uplink_total"]))]
+    lp = jnp.asarray(lumap.unit_params, jnp.float32)
+    stats = round_comm(lmask, lumap, divergence_feedback=True,
+                       unit_bytes_override=jnp.ceil(lp * 8 / 8.0)
+                       + UNIT_HEADER_BYTES)
+    lora_rows.append(("fedldf_lora_q8_packed", float(stats["uplink_total"])))
+
     for algo, up in rows:
         sav = 1 - up / fedavg_up
         print(f"{algo},{up/1e6:.2f},{up*rounds/1e9:.2f},{sav:.4f}", file=out)
-    return dict(rows)
+    for algo, up in lora_rows:
+        sav = 1 - up / full_up
+        print(f"{algo},{up/1e6:.2f},{up*rounds/1e9:.2f},{sav:.4f}", file=out)
+    return dict(rows + lora_rows)
 
 
 if __name__ == "__main__":

@@ -21,13 +21,20 @@ from repro.core.units import tree_sub
 Pytree = Any
 
 
-def _lowrank_approx(delta: jnp.ndarray, rank: int,
-                    iters: int = 2, seed: int = 0) -> jnp.ndarray:
-    """Rank-r approximation of a 2-D matrix via subspace iteration."""
+def _lowrank_approx(delta: jnp.ndarray, rank: int, iters: int = 2,
+                    key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Rank-r approximation of a 2-D matrix via subspace iteration.
+
+    ``key`` seeds the starting subspace; ``None`` keeps the legacy fixed
+    ``PRNGKey(0)`` start (bit-compatible with the pre-key behaviour, but
+    correlated across leaves/rounds — callers that care thread a key).
+    """
     m, n = delta.shape
     r = min(rank, m, n)
     d32 = delta.astype(jnp.float32)
-    q = jax.random.normal(jax.random.PRNGKey(seed), (n, r), jnp.float32)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (n, r), jnp.float32)
     for _ in range(iters):
         q, _ = jnp.linalg.qr(d32.T @ (d32 @ q))        # (n, r)
     u = d32 @ q                                        # (m, r)
@@ -36,27 +43,39 @@ def _lowrank_approx(delta: jnp.ndarray, rank: int,
 
 def lowrank_upload(local: Pytree, global_params: Pytree, rank: int,
                    residual: Optional[Pytree] = None,
-                   min_dim: int = 32) -> tuple[Pytree, Pytree]:
+                   min_dim: int = 32,
+                   key: Optional[jax.Array] = None) -> tuple[Pytree, Pytree]:
     """Client-side: (Θ̂ as reconstructed by the server, new residual).
 
     2-D leaves with both dims ≥ min_dim are rank-truncated; others dense.
-    Stacked 3-D+ leaves factorize per leading index (vmapped).
+    Stacked 3-D+ leaves factorize per leading index (vmapped). ``key``
+    decorrelates the power-iteration starts: each leaf folds in its flat
+    index, each stacked slice gets its own split; ``None`` reproduces the
+    legacy shared fixed start.
     """
     delta = tree_sub(local, global_params)
     if residual is not None:
         delta = jax.tree.map(lambda d, e: d + e.astype(d.dtype),
                              delta, residual)
 
-    def approx(leaf):
+    def approx(leaf, leaf_key):
         if leaf.ndim == 2 and min(leaf.shape) >= min_dim:
-            return _lowrank_approx(leaf, rank)
+            return _lowrank_approx(leaf, rank, key=leaf_key)
         if leaf.ndim >= 3 and min(leaf.shape[-2:]) >= min_dim:
             flat = leaf.reshape((-1,) + leaf.shape[-2:])
-            out = jax.vmap(lambda x: _lowrank_approx(x, rank))(flat)
+            if leaf_key is None:
+                out = jax.vmap(lambda x: _lowrank_approx(x, rank))(flat)
+            else:
+                ks = jax.random.split(leaf_key, flat.shape[0])
+                out = jax.vmap(
+                    lambda x, k: _lowrank_approx(x, rank, key=k))(flat, ks)
             return out.reshape(leaf.shape)
         return leaf  # dense upload
 
-    recon = jax.tree.map(approx, delta)
+    flat, treedef = jax.tree.flatten(delta)
+    recon = jax.tree.unflatten(treedef, [
+        approx(leaf, None if key is None else jax.random.fold_in(key, i))
+        for i, leaf in enumerate(flat)])
     new_residual = jax.tree.map(
         lambda d, r_: d.astype(jnp.float32) - r_.astype(jnp.float32),
         delta, recon)

@@ -22,6 +22,10 @@ from repro.federated.strategies import (FedADPOptions, FedLAMAOptions,
 # the wire-format config rides FLConfig(compression=...); re-exported so
 # FL callers need one import (full wire format: repro.core.wire)
 from repro.core.wire import CompressionConfig
+# the trainable/frozen split rides FLConfig(partition=...); re-exported so
+# adapter fine-tuning callers need one import (full module:
+# repro.core.partition)
+from repro.core.partition import ParamPartition
 # observability config rides FLConfig(telemetry=...); re-exported so FL
 # callers need one import (full subsystem: repro.telemetry)
 from repro.telemetry import TelemetryConfig
@@ -29,7 +33,8 @@ from repro.telemetry import TelemetryConfig
 __all__ = ["make_local_update", "plain_sgd_client", "local_rows",
            "round_keys", "sample_clients", "sample_clients_jax", "ALGOS",
            "CompressionConfig", "FLConfig", "FLStrategy", "FedADPOptions",
-           "FedLAMAOptions", "FedLPOptions", "QuantizedUpload",
+           "FedLAMAOptions", "FedLPOptions", "ParamPartition",
+           "QuantizedUpload",
            "TelemetryConfig", "TrainLog",
            "build_round_fn", "build_round_scan", "build_round_vmap",
            "init_residual_store", "make_strategy", "register_strategy",

@@ -8,11 +8,12 @@ two-phase recompute execution mode for large models (DESIGN.md §3).
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.partition import ParamPartition
 from repro.optim import sgd
 from repro.optim.opt import Optimizer
 
@@ -21,7 +22,8 @@ LossFn = Callable[[Pytree, dict], jnp.ndarray]
 
 
 def make_local_update(loss_fn: LossFn, opt: Optimizer,
-                      local_steps: int = 1, remat: bool = False):
+                      local_steps: int = 1, remat: bool = False,
+                      partition: Optional[ParamPartition] = None):
     """Returns local_update(global_params, batch) -> (local_params, mean_loss).
 
     ``batch`` leaves are (b, ...) — the same batch is used for every local
@@ -33,7 +35,34 @@ def make_local_update(loss_fn: LossFn, opt: Optimizer,
     FL schedule is one ``lax.scan`` (run_training_scan) and K stacked
     clients × local activations would otherwise set the peak-memory
     high-water mark.
+
+    With a :class:`~repro.core.partition.ParamPartition`, the returned
+    function is ``local_update(trainable, batch, frozen) ->
+    (local_trainable, mean_loss)``: the loss sees the merged full model,
+    but gradients, optimizer state, and the returned local model cover the
+    trainable sub-pytree only — the frozen base is a closed-over constant
+    of the round, exactly the adapter fine-tuning contract.
     """
+    if partition is not None:
+        def local_update_part(trainable: Pytree, batch: dict,
+                              frozen: Pytree):
+            ostate0 = opt.init(trainable)
+
+            def step(carry, _):
+                train, ostate = carry
+                loss, grads = jax.value_and_grad(
+                    lambda tr: loss_fn(partition.merge(tr, frozen),
+                                       batch))(train)
+                train, ostate = opt.update(grads, ostate, train)
+                return (train, ostate), loss
+
+            if remat:
+                step = jax.checkpoint(step)
+            (train, _), losses = jax.lax.scan(
+                step, (trainable, ostate0), None, length=local_steps)
+            return train, losses.mean()
+
+        return local_update_part
 
     def local_update(global_params: Pytree, batch: dict):
         ostate0 = opt.init(global_params)

@@ -75,6 +75,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import aggregation as agg
 from repro.core import comm as comm_mod
+from repro.core.partition import ParamPartition, partition_counts
 from repro.core.units import UnitMap
 from repro.core.wire import CompressionConfig
 from repro.data.device import ClientShards
@@ -115,6 +116,16 @@ _DEPRECATED_ALGO_FIELDS = (
     ("fedlama_lam", "fedlama", "lam"),
 )
 
+# Raised when compression=CompressionConfig(...) meets the sequential-client
+# scan engine (asserted verbatim in tests/test_wire.py — keep in sync).
+_SCAN_COMPRESSION_MSG = (
+    "compression=CompressionConfig(...) is not supported by the "
+    "sequential-client scan engine (mode='scan'): the packed quantized "
+    "uplink reduces a stacked client axis. Supported drivers: mode='vmap' "
+    "on a single device, the mesh-sharded round (FLConfig(mesh=...)), and "
+    "both multi-round drivers (run_training / run_training_scan) on top of "
+    "them.")
+
 
 @dataclasses.dataclass(frozen=True)
 class FLConfig:
@@ -133,6 +144,12 @@ class FLConfig:
     # packed wire-format quantized uploads + optional error feedback +
     # divergence-driven bit allocation (bits="auto"). None = fp32 uploads.
     compression: Optional[CompressionConfig] = None
+    # trainable/frozen split (repro.core.partition.ParamPartition): only
+    # the trainable sub-pytree is trained, divergence-scored, communicated,
+    # and aggregated; the frozen base stays device-resident and is closed
+    # over by local training (adapter fine-tuning). None = every leaf
+    # trainable, bit-identical to the pre-partition engine.
+    partition: Optional[ParamPartition] = None
     batch_per_client: int = 32
     # remat local-training steps (jax.checkpoint): caps activation memory
     # when K stacked clients run inside the scan engine
@@ -272,8 +289,12 @@ class FLConfig:
                 raise ValueError(
                     f"strategy {self.algo!r} declares supports_scan=False")
             if self.compression is not None:
-                raise NotImplementedError(
-                    "quantized uploads need stacked clients (mode='vmap')")
+                raise NotImplementedError(_SCAN_COMPRESSION_MSG)
+        if self.partition is not None and \
+                not isinstance(self.partition, ParamPartition):
+            raise TypeError(
+                "FLConfig.partition must be a repro.core.partition."
+                f"ParamPartition or None, got {type(self.partition)}")
         if self.mesh is not None:
             assert self.mode == "vmap", \
                 "client-axis sharding needs stacked clients (mode='vmap')"
@@ -441,16 +462,27 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig,
     tele = flcfg.telemetry
     taps_on = tele is not None and tele.taps
 
-    def body(pspecs, sspecs, params, batch, data_sizes, key, state):
+    def body(pspecs, sspecs, fspecs, params, batch, data_sizes, key, state,
+             frozen):
         # everything in here sees the LOCAL shard: kloc clients per device,
-        # and (2-D mesh) 1/M 'model'-axis blocks of each param/state leaf
+        # and (2-D mesh) 1/M 'model'-axis blocks of each param/state leaf.
+        # With a partition, ``params`` is the TRAINABLE sub-pytree — the
+        # frozen base is gathered transiently for local training and never
+        # touches the psum or the outputs.
         params_shard = params
         if m > 1:
             params = tree_all_gather(params, pspecs, MODEL_AXIS)
+            if frozen is not None:
+                frozen = tree_all_gather(frozen, fspecs, MODEL_AXIS)
             if state is not None:
                 state = _state_model_gather(state, sspecs)
-        locals_, losses = jax.vmap(local_update, in_axes=(None, 0))(
-            params, batch)
+        if frozen is None:
+            locals_, losses = jax.vmap(local_update, in_axes=(None, 0))(
+                params, batch)
+        else:
+            locals_, losses = jax.vmap(
+                lambda p, b: local_update(p, b, frozen),
+                in_axes=(None, 0))(params, batch)
 
         divs = None
         if strategy.needs_divergence:
@@ -573,25 +605,40 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig,
     if taps_on:
         out_metrics_spec["taps"] = P()
 
-    def round_fn(params, batch, data_sizes, key, state=None):
+    def round_fn(params, batch, data_sizes, key, state=None, frozen=None):
         # specs are pure shape logic, computed at trace time (the drivers
-        # jit round_fn, so this runs once per compiled configuration)
+        # jit round_fn, so this runs once per compiled configuration).
+        # State and frozen-base arguments are optional; both presences are
+        # static per configuration, so the arg list is assembled once.
         pspecs = fl_param_specs(params, mesh)
+        fspecs = None if frozen is None else fl_param_specs(frozen, mesh)
+        sspecs = None
+        in_specs = [pspecs, P(ax), P(ax), P()]
+        args = [params, batch, data_sizes, key]
+        out_metrics = dict(out_metrics_spec)
         if state is not None:
             sspecs = strategy.state_specs(params, state, mesh)
             st_specs = _state_shard_specs(state, sspecs, ax)
-            sharded = shard_map_norep(
-                functools.partial(body, pspecs, sspecs), mesh,
-                in_specs=(pspecs, P(ax), P(ax), P(), st_specs),
-                out_specs=(pspecs,
-                           {**out_metrics_spec, "state": st_specs}))
-            return sharded(params, batch, data_sizes, key, state)
-        sharded = shard_map_norep(
-            lambda p, b, s, key_: body(pspecs, None, p, b, s, key_, None),
-            mesh,
-            in_specs=(pspecs, P(ax), P(ax), P()),
-            out_specs=(pspecs, out_metrics_spec))
-        return sharded(params, batch, data_sizes, key)
+            in_specs.append(st_specs)
+            args.append(state)
+            out_metrics["state"] = st_specs
+        if frozen is not None:
+            # the frozen base enters model-sharded like the params and is
+            # consumed inside the body (all-gathered transiently on a 2-D
+            # mesh); it is never part of the outputs
+            in_specs.append(fspecs)
+            args.append(frozen)
+        has_state, has_frozen = state is not None, frozen is not None
+
+        def call(p, b, s, key_, *rest):
+            rest = list(rest)
+            st = rest.pop(0) if has_state else None
+            fz = rest.pop(0) if has_frozen else None
+            return body(pspecs, sspecs, fspecs, p, b, s, key_, st, fz)
+
+        sharded = shard_map_norep(call, mesh, in_specs=tuple(in_specs),
+                                  out_specs=(pspecs, out_metrics))
+        return sharded(*args)
 
     return round_fn
 
@@ -607,7 +654,8 @@ def build_round_vmap(loss_fn, umap: UnitMap, flcfg: FLConfig,
     """
     opt = opt or sgd(flcfg.lr)
     local_update = make_local_update(loss_fn, opt, flcfg.local_steps,
-                                     remat=flcfg.remat)
+                                     remat=flcfg.remat,
+                                     partition=flcfg.partition)
     strategy = make_strategy(flcfg)
     if flcfg.mesh is not None:
         return _build_round_vmap_sharded(local_update, umap, flcfg, strategy)
@@ -615,9 +663,17 @@ def build_round_vmap(loss_fn, umap: UnitMap, flcfg: FLConfig,
     taps_on = flcfg.telemetry is not None and flcfg.telemetry.taps
 
     def round_fn(params: Pytree, batch: dict, data_sizes: jnp.ndarray,
-                 key: jax.Array, state: Optional[dict] = None):
-        locals_, losses = jax.vmap(local_update, in_axes=(None, 0))(
-            params, batch)
+                 key: jax.Array, state: Optional[dict] = None,
+                 frozen: Optional[Pytree] = None):
+        if frozen is None:
+            locals_, losses = jax.vmap(local_update, in_axes=(None, 0))(
+                params, batch)
+        else:
+            # partitioned round: ``params`` is the trainable sub-pytree;
+            # the frozen base broadcasts into every client's local step
+            locals_, losses = jax.vmap(
+                lambda p, b: local_update(p, b, frozen),
+                in_axes=(None, 0))(params, batch)
 
         # divergence feedback (Eq. 3) is computed on the TRUE local model —
         # upload transforms (e.g. quantization) below only affect the
@@ -706,24 +762,27 @@ def build_round_scan(loss_fn, umap: UnitMap, flcfg: FLConfig,
     """
     if getattr(flcfg, "compression", None) is not None or \
             getattr(flcfg, "quantize_bits", 0):
-        raise NotImplementedError(
-            "quantized uploads need stacked clients (vmap mode)")
+        raise NotImplementedError(_SCAN_COMPRESSION_MSG)
     strategy = make_strategy(flcfg)
     if not strategy.supports_scan:
         raise NotImplementedError(
             f"strategy {strategy.name!r} declares supports_scan=False")
     opt = opt or sgd(flcfg.lr)
     local_update = make_local_update(loss_fn, opt, flcfg.local_steps,
-                                     remat=flcfg.remat)
+                                     remat=flcfg.remat,
+                                     partition=flcfg.partition)
     k = flcfg.clients_per_round
     taps_on = flcfg.telemetry is not None and flcfg.telemetry.taps
 
     def round_fn(params: Pytree, batch: dict, data_sizes: jnp.ndarray,
-                 key: jax.Array, state: Optional[dict] = None):
+                 key: jax.Array, state: Optional[dict] = None,
+                 frozen: Optional[Pytree] = None):
+        lu = (local_update if frozen is None
+              else lambda p, b: local_update(p, b, frozen))
         # ---- phase 1: divergence feedback (only if the policy needs it)
         if strategy.needs_divergence:
             def phase1(carry, batch_k):
-                local, loss = local_update(params, batch_k)
+                local, loss = lu(params, batch_k)
                 return carry, (umap.divergence(local, params), loss)
 
             _, (divs, losses1) = jax.lax.scan(phase1, None, batch)
@@ -740,7 +799,7 @@ def build_round_scan(loss_fn, umap: UnitMap, flcfg: FLConfig,
             # ---- phase 2: recompute local training, stream layers in
             def phase2(acc, inp):
                 batch_k, frac_k = inp
-                local, loss = local_update(params, batch_k)
+                local, loss = lu(params, batch_k)
                 return agg.streaming_add(acc, local, umap, frac_k), loss
 
             acc0 = agg.streaming_init(params)
@@ -751,7 +810,7 @@ def build_round_scan(loss_fn, umap: UnitMap, flcfg: FLConfig,
             # sequentially, let the scan stack the locals, and call the
             # same stacked-clients aggregate hook as the vmap engine.
             def phase2_stack(carry, batch_k):
-                return carry, local_update(params, batch_k)
+                return carry, lu(params, batch_k)
 
             _, (stacked, losses2) = jax.lax.scan(phase2_stack, None, batch)
             new_params = strategy.aggregate(stacked, umap, selection,
@@ -843,12 +902,15 @@ def _cached(kind: str, loss_fn, umap: UnitMap, flcfg: FLConfig, build):
 # ======================================================================
 def _run_meta(flcfg: FLConfig, *, driver: str, umap: UnitMap, seed: int,
               sampler: str, start_round: int, rounds: int,
-              run_id: str) -> dict:
+              run_id: str, partition_info: Optional[dict] = None) -> dict:
     """Ledger run-header metadata: everything a consumer needs to label a
     segment without rebuilding the model (notably the layer-unit names,
-    which index every per-layer tap vector)."""
+    which index every per-layer tap vector — under a partition those are
+    the *trainable* units, e.g. per-adapter-layer ``blocks/<d>`` labels,
+    and ``partition`` carries the trainable/frozen param+byte totals)."""
     mesh = flcfg.mesh
     return {"run_id": run_id, "driver": driver, "algo": flcfg.algo,
+            "partition": partition_info,
             "mode": flcfg.mode, "sampler": sampler, "seed": seed,
             "start_round": start_round, "rounds": rounds,
             "num_clients": flcfg.num_clients,
@@ -924,6 +986,13 @@ def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
     sampler's sequential numpy stream is not resumable).
     """
     assert sampler in ("host", "jax"), sampler
+    partition, frozen, pinfo = flcfg.partition, None, None
+    if partition is not None:
+        # split ONCE: everything downstream — unit map, strategy state,
+        # round functions, comm accounting — sees the trainable sub-pytree;
+        # the frozen base rides along as an untouched round input
+        pinfo = partition_counts(partition, params)
+        params, frozen = partition.split(params)
     umap = UnitMap.build(params)
     strategy = make_strategy(flcfg)
     round_fn = _cached("round", loss_fn, umap, flcfg,
@@ -937,13 +1006,22 @@ def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
     if tele is not None and tele.wants_ledger:
         ledger = RoundLedger(tele.ledger_path, meta=_run_meta(
             flcfg, driver="host", umap=umap, seed=seed, sampler=sampler,
-            start_round=start_round, rounds=rounds, run_id=tele.run_id))
+            start_round=start_round, rounds=rounds, run_id=tele.run_id,
+            partition_info=pinfo))
     if flcfg.mesh is not None:
         # place the global model over the mesh: replicated across 'clients'
         # so the sharded round starts from device-local copies everywhere,
-        # and (2-D mesh) FSDP-sharded 1/M per device along the 'model' axis
+        # and (2-D mesh) FSDP-sharded 1/M per device along the 'model' axis.
+        # The frozen base gets the same policy: big base leaves land
+        # model-sharded, small (indivisible) adapters replicate.
         params = jax.device_put(
             params, to_named(fl_param_specs(params, flcfg.mesh), flcfg.mesh))
+        if frozen is not None:
+            frozen = jax.device_put(
+                frozen,
+                to_named(fl_param_specs(frozen, flcfg.mesh), flcfg.mesh))
+    merged = ((lambda p: p) if partition is None
+              else (lambda p: partition.merge(p, frozen)))
     if server_state is not None:
         # checkpoint-loaded states arrive as numpy; the row scatter below
         # needs jax arrays (and a mesh needs explicit placement)
@@ -987,13 +1065,14 @@ def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
                 sizes = jnp.asarray(all_sizes[clients])
                 key = jax.random.fold_in(host_base, t)
                 clients = jnp.asarray(clients)
+            kw = {} if frozen is None else {"frozen": frozen}
             if state is not None:
                 st_rows = _state_round_view(state, clients)
                 params, metrics = round_fn(params, batch, sizes, key,
-                                           st_rows)
+                                           st_rows, **kw)
                 state = _state_scatter(state, metrics["state"], clients)
             else:
-                params, metrics = round_fn(params, batch, sizes, key)
+                params, metrics = round_fn(params, batch, sizes, key, **kw)
             log.meter.update(metrics["comm"])
             log.rounds.append(t)
             loss_t = float(metrics["loss"])     # device sync
@@ -1016,7 +1095,7 @@ def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
                     wall_s=wall_s, mem_peak_bytes=mem)
             if eval_fn is not None and (t % eval_every == 0
                                         or t == start_round + rounds - 1):
-                err = float(eval_fn(params))
+                err = float(eval_fn(merged(params)))
                 log.test_errors.append((t, err, log.meter.uplink_bytes))
                 if ledger is not None:
                     ledger.eval(t, err, log.meter.uplink_bytes)
@@ -1030,7 +1109,7 @@ def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
         if ledger is not None:
             ledger.close()
     log.final_state = state
-    return params, log
+    return merged(params), log
 
 
 # ======================================================================
@@ -1084,7 +1163,7 @@ def _build_block_fn(loss_fn, umap: UnitMap, flcfg: FLConfig):
             for n_, e in st["client"].items()}
         return out
 
-    def one_round(carry, t, shards, all_sizes, base_key):
+    def one_round(carry, t, shards, all_sizes, base_key, frozen):
         params, state, acc = carry
         ck, bk, ak = round_keys(base_key, t)
         if mesh is not None:
@@ -1104,15 +1183,17 @@ def _build_block_fn(loss_fn, umap: UnitMap, flcfg: FLConfig):
         if client_spec is not None:
             batch = jax.lax.with_sharding_constraint(batch, client_spec)
             sizes = jax.lax.with_sharding_constraint(sizes, client_spec)
+        kw = {} if frozen is None else {"frozen": frozen}
         if state is not None:
             st_rows = constrain_state(_state_round_view(state, clients),
                                       params, rows=True)
-            params, metrics = round_fn(params, batch, sizes, ak, st_rows)
+            params, metrics = round_fn(params, batch, sizes, ak, st_rows,
+                                       **kw)
             state = constrain_state(
                 _state_scatter(state, metrics.pop("state"), clients),
                 params, rows=False)
         else:
-            params, metrics = round_fn(params, batch, sizes, ak)
+            params, metrics = round_fn(params, batch, sizes, ak, **kw)
         acc = comm_mod.comm_acc_update(acc, metrics["comm"])
         per_round = {"loss": metrics["loss"],
                      "uplink_bytes": acc["uplink_bytes"]}
@@ -1134,9 +1215,13 @@ def _build_block_fn(loss_fn, umap: UnitMap, flcfg: FLConfig):
 
     @functools.partial(jax.jit, static_argnames=("num",),
                        donate_argnums=donate)
-    def run_block(carry, shards, all_sizes, base_key, t0, num):
+    def run_block(carry, shards, all_sizes, base_key, t0, num, frozen=None):
+        # ``frozen`` is a real (pytree) argument, not a closure: closed-over
+        # arrays would be baked into the jaxpr as constants and re-staged
+        # per driver call. It is never donated — it outlives every block.
         body = functools.partial(one_round, shards=shards,
-                                 all_sizes=all_sizes, base_key=base_key)
+                                 all_sizes=all_sizes, base_key=base_key,
+                                 frozen=frozen)
         return jax.lax.scan(body, carry, t0 + jnp.arange(num))
 
     return run_block
@@ -1171,6 +1256,10 @@ def run_training_scan(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
     checkpoint>`` continues a run bit-identically to one that never
     stopped (regression-tested in tests/test_state_seam.py).
     """
+    partition, frozen, pinfo = flcfg.partition, None, None
+    if partition is not None:
+        pinfo = partition_counts(partition, params)
+        params, frozen = partition.split(params)
     umap = UnitMap.build(params)
     shards = (fldata if isinstance(fldata, ClientShards)
               else ClientShards.from_federated(fldata))
@@ -1178,10 +1267,17 @@ def run_training_scan(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
     run_block = _cached("block", loss_fn, umap, flcfg,
                         lambda: _build_block_fn(loss_fn, umap, flcfg))
     if flcfg.mesh is not None:
-        # replicated over 'clients', FSDP-sharded over 'model' (2-D mesh)
+        # replicated over 'clients', FSDP-sharded over 'model' (2-D mesh);
+        # the frozen base follows the same placement policy
         params = jax.device_put(
             params, to_named(fl_param_specs(params, flcfg.mesh), flcfg.mesh))
+        if frozen is not None:
+            frozen = jax.device_put(
+                frozen,
+                to_named(fl_param_specs(frozen, flcfg.mesh), flcfg.mesh))
         shards = shards.place(flcfg.mesh)
+    merged = ((lambda p: p) if partition is None
+              else (lambda p: partition.merge(p, frozen)))
     if jax.default_backend() in ("tpu", "gpu"):
         # run_block donates its carry; copy once so the caller's param
         # buffers survive the first block (state/acc are fresh).
@@ -1203,7 +1299,9 @@ def run_training_scan(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
     if tele is not None and tele.wants_ledger:
         ledger = RoundLedger(tele.ledger_path, meta=_run_meta(
             flcfg, driver="scan", umap=umap, seed=seed, sampler="jax",
-            start_round=start_round, rounds=rounds, run_id=tele.run_id))
+            start_round=start_round, rounds=rounds, run_id=tele.run_id,
+            partition_info=pinfo))
+    run_kw = {} if frozen is None else {"frozen": frozen}
     t0 = 0
     try:
         for cut in _eval_cuts(rounds, eval_every, eval_fn is not None):
@@ -1211,7 +1309,8 @@ def run_training_scan(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
             win.block_begin(start_round + t0, start_round + cut)
             wall0 = time.perf_counter() if sample_sys else None
             carry, per_round = run_block(carry, shards, all_sizes, base_key,
-                                         jnp.int32(start_round + t0), num)
+                                         jnp.int32(start_round + t0), num,
+                                         **run_kw)
             losses = np.asarray(per_round["loss"])
             uplink = np.asarray(per_round["uplink_bytes"])
             # the np.asarray pulls above synced the block, so block wall
@@ -1243,7 +1342,7 @@ def run_training_scan(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
                         wall_s=wall_each, mem_peak_bytes=mem)
             t_last = start_round + cut - 1
             if eval_fn is not None:
-                err = float(eval_fn(carry[0]))
+                err = float(eval_fn(merged(carry[0])))
                 log.test_errors.append((t_last, err, float(uplink[-1])))
                 if ledger is not None:
                     ledger.eval(t_last, err, float(uplink[-1]))
@@ -1260,4 +1359,4 @@ def run_training_scan(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
     params, final_state, acc = carry
     log.meter = comm_mod.CommMeter.from_accumulator(acc)
     log.final_state = final_state
-    return params, log
+    return merged(params), log

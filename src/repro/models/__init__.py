@@ -1,6 +1,9 @@
 """Model zoo: transformer families + VGG-9 (paper's model)."""
-from repro.models import attention, cnn, config, decode, layers, moe, ssm, transformer
+from repro.models import (attention, cnn, config, decode, layers, lora, moe,
+                          ssm, transformer)
 from repro.models.config import ModelConfig, dtype_of
+from repro.models.lora import inject_lora, lora_partition
 
-__all__ = ["attention", "cnn", "config", "decode", "layers", "moe", "ssm",
-           "transformer", "ModelConfig", "dtype_of"]
+__all__ = ["attention", "cnn", "config", "decode", "layers", "lora", "moe",
+           "ssm", "transformer", "ModelConfig", "dtype_of", "inject_lora",
+           "lora_partition"]

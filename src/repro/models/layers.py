@@ -32,6 +32,23 @@ def swiglu(x, w_gate, w_up, w_down):
     return jnp.einsum("...f,fd->...d", h, w_down)
 
 
+def lora_dense(x, w, lora=None, name=None):
+    """Dense projection with an optional LoRA adapter delta.
+
+    ``y = x @ w`` plus, when ``lora`` (the enclosing module's adapter dict —
+    see models/lora.py) holds factors for ``name``, the low-rank update
+    ``(x @ a) @ b``. Factors are cast to the activation dtype; ``b`` is
+    zero-initialised at injection so the adapted forward is bit-identical
+    to the base until the factors train away from zero.
+    """
+    y = jnp.einsum("...d,df->...f", x, w)
+    if lora is not None and name in lora:
+        f = lora[name]
+        z = jnp.einsum("...d,dr->...r", x, f["a"].astype(x.dtype))
+        y = y + jnp.einsum("...r,rf->...f", z, f["b"].astype(x.dtype))
+    return y
+
+
 def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
     dt = dtype_of(cfg.param_dtype)
     f = d_ff or cfg.d_ff
@@ -44,4 +61,10 @@ def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
 
 
 def mlp_fwd(p, x):
-    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+    lora = p.get("lora")
+    if lora is None:
+        return swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+    g = lora_dense(x, p["w_gate"], lora, "w_gate")
+    u = lora_dense(x, p["w_up"], lora, "w_up")
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return lora_dense(h, p["w_down"], lora, "w_down")

@@ -1,0 +1,105 @@
+"""LoRA-style adapters over the transformer zoo [arXiv:2106.09685 idiom].
+
+``inject_lora`` drops low-rank factor pairs ``{"a": (L, d_in, r),
+"b": (L, r, d_out)}`` next to the stacked dense projections they adapt
+(``blocks["attn"]["lora"]["wq"]``, ...). ``b`` is zero-initialised, so the
+adapted forward equals the base forward bit-for-bit at injection time —
+training moves only the factors. The forward hookup lives in
+:func:`repro.models.layers.lora_dense`.
+
+Combined with :class:`repro.core.partition.ParamPartition` (see
+``lora_partition``) this is the adapter-only uplink workload: the frozen
+base stays device-resident and is broadcast once, the wire carries factors
+only, and FedLDF's per-layer divergence (Eq. 3) scores per-depth adapter
+units — the stacked (L, ...) leading axis folds into the existing
+``blocks/i`` units of :class:`repro.core.units.UnitMap`.
+
+Adapted projections per block module (only those present are touched):
+
+    attn: wq wk wv wo          (dense / moe / hybrid / enc / dec families)
+    mlp:  w_gate w_up w_down   (all non-moe FFN blocks)
+    ssm:  in_proj out_proj     (mamba2 / hybrid families)
+
+Cross-attention and MoE expert tensors are intentionally not adapted —
+the classic LoRA recipe targets self-attention + FFN, and expert tensors
+carry an extra (E,) axis the factor layout does not model.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import ParamPartition
+
+Pytree = Any
+
+# module-name -> projection names eligible for adapters (ndim-3 stacked
+# (L, d_in, d_out) leaves only; missing modules/names are skipped).
+LORA_TARGETS: Mapping[str, Tuple[str, ...]] = {
+    "attn": ("wq", "wk", "wv", "wo"),
+    "mlp": ("w_gate", "w_up", "w_down"),
+    "ssm": ("in_proj", "out_proj"),
+}
+
+# stacked-block subtrees adapters may live under (see transformer.init_params)
+LORA_SUBTREES: Tuple[str, ...] = ("blocks", "enc_blocks")
+
+
+def inject_lora(key, params: Pytree, rank: int,
+                targets: Optional[Mapping[str, Tuple[str, ...]]] = None,
+                subtrees: Tuple[str, ...] = LORA_SUBTREES) -> Pytree:
+    """Returns a copy of ``params`` with adapter factors injected.
+
+    ``rank`` is clipped per-projection to ``min(rank, d_in, d_out)``.
+    ``a`` ~ N(0, 1/d_in), ``b`` = 0 (forward-exact at init). Raises
+    ValueError if no eligible projection exists — an empty adapter set
+    would make the trainable partition empty.
+    """
+    if rank < 1:
+        raise ValueError(f"lora rank must be >= 1, got {rank}")
+    targets = LORA_TARGETS if targets is None else targets
+    out = dict(params)
+    injected = 0
+    for sub in subtrees:
+        if sub not in params:
+            continue
+        blocks = dict(params[sub])
+        for mod, projs in targets.items():
+            if mod not in blocks:
+                continue
+            mdict = dict(blocks[mod])
+            lora = dict(mdict.get("lora", {}))
+            for name in projs:
+                w = mdict.get(name)
+                if w is None or getattr(w, "ndim", 0) != 3:
+                    continue
+                depth, din, dout = w.shape
+                r = min(rank, din, dout)
+                key, ka = jax.random.split(key)
+                a = (jax.random.normal(ka, (depth, din, r))
+                     / np.sqrt(din)).astype(w.dtype)
+                lora[name] = {"a": a, "b": jnp.zeros((depth, r, dout),
+                                                     w.dtype)}
+                injected += 1
+            if lora:
+                mdict["lora"] = lora
+                blocks[mod] = mdict
+        out[sub] = blocks
+    if injected == 0:
+        raise ValueError(
+            "inject_lora found no eligible projection: params has none of "
+            f"{sorted(targets)} with stacked (L, d_in, d_out) leaves under "
+            f"{subtrees}")
+    return out
+
+
+def lora_partition(params: Pytree) -> ParamPartition:
+    """Trainable = every leaf under a ``lora`` path segment; rest frozen.
+
+    Pass the result as ``FLConfig(partition=...)`` to get the adapter-only
+    uplink: the base model is broadcast once and never travels the wire.
+    """
+    return ParamPartition.by_substring(params, "lora")

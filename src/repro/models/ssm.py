@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig, dtype_of
-from repro.models.layers import init_dense, rms_norm
+from repro.models.layers import init_dense, lora_dense, rms_norm
 
 
 def init_ssm(key, cfg: ModelConfig):
@@ -38,7 +38,7 @@ def init_ssm(key, cfg: ModelConfig):
 
 def _split_proj(p, x, cfg: ModelConfig):
     di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
-    zxbcdt = jnp.einsum("...d,df->...f", x, p["in_proj"])
+    zxbcdt = lora_dense(x, p["in_proj"], p.get("lora"), "in_proj")
     z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
     return z, xbc, dt_raw
 
@@ -120,7 +120,8 @@ def ssd_fwd(p, xin: jnp.ndarray, cfg: ModelConfig,
 
     z = z.astype(jnp.float32)
     y = rms_norm((y * jax.nn.silu(z)).astype(xin.dtype), p["norm_scale"])
-    out = jnp.einsum("...f,fd->...d", y, p["out_proj"].astype(y.dtype))
+    out = lora_dense(y, p["out_proj"].astype(y.dtype), p.get("lora"),
+                     "out_proj")
     if not return_cache:
         return out
     # Recurrent cache: final SSM state + raw (pre-conv) xbc tail.
@@ -173,5 +174,6 @@ def ssd_step(p, xin: jnp.ndarray, cache: dict, cfg: ModelConfig):
 
     z = jax.nn.silu(z.astype(jnp.float32))[:, None, :]
     y = rms_norm((y * z).astype(xin.dtype), p["norm_scale"])
-    out = jnp.einsum("...f,fd->...d", y, p["out_proj"].astype(y.dtype))
+    out = lora_dense(y, p["out_proj"].astype(y.dtype), p.get("lora"),
+                     "out_proj")
     return out, {"conv": new_conv, "state": state}

@@ -29,7 +29,8 @@ from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models.config import ModelConfig, dtype_of
-from repro.models.layers import init_dense, init_embed, init_mlp, mlp_fwd, rms_norm
+from repro.models.layers import (init_dense, init_embed, init_mlp,
+                                 lora_dense, mlp_fwd, rms_norm)
 
 Pytree = Any
 
@@ -124,9 +125,10 @@ def init_params(key, cfg: ModelConfig) -> Pytree:
 def _qkv(p, cfg: ModelConfig, x, positions):
     b, s, d = x.shape
     hd = cfg.hd
-    q = jnp.einsum("bsd,df->bsf", x, p["wq"])
-    k = jnp.einsum("bsd,df->bsf", x, p["wk"])
-    v = jnp.einsum("bsd,df->bsf", x, p["wv"])
+    lora = p.get("lora")
+    q = lora_dense(x, p["wq"], lora, "wq")
+    k = lora_dense(x, p["wk"], lora, "wk")
+    v = lora_dense(x, p["wv"], lora, "wv")
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(b, s, cfg.num_heads, hd)
@@ -152,7 +154,8 @@ def _self_attn(p, cfg: ModelConfig, x, positions, *, causal=True):
     o = attn.attend(q, k, v, q_pos=pos1d, kv_pos=pos1d, causal=causal,
                     window=cfg.sliding_window, chunk=cfg.attn_chunk,
                     probs_bf16=cfg.attn_probs_bf16)
-    return jnp.einsum("bsf,fd->bsd", o.reshape(x.shape[0], s, -1), p["wo"])
+    return lora_dense(o.reshape(x.shape[0], s, -1), p["wo"],
+                      p.get("lora"), "wo")
 
 
 def _cross_attn(p, cfg: ModelConfig, x, enc_kv):
@@ -302,3 +305,15 @@ def lm_loss(params: Pytree, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
     mask = (labels >= 0).astype(jnp.float32)
     loss = jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
     return loss + 0.01 * aux
+
+
+def make_lm_loss(cfg: ModelConfig):
+    """A ``loss_fn(params, batch)`` closure over ``cfg`` for the FL drivers.
+
+    The drivers key their jit cache on loss_fn identity — build this once
+    per run and reuse the same object across rounds and drivers.
+    """
+    def loss_fn(params: Pytree, batch: dict) -> jnp.ndarray:
+        return lm_loss(params, cfg, batch)
+
+    return loss_fn

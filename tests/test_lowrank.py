@@ -28,6 +28,48 @@ def test_approx_error_decreases_with_rank():
     assert errs[3] < 1e-3  # full rank ⇒ exact
 
 
+def test_key_threading_default_matches_legacy_sketch():
+    """key=None must be bit-compatible with the old fixed-PRNGKey(0) start."""
+    m = jax.random.normal(jax.random.PRNGKey(4), (48, 40))
+    legacy = _lowrank_approx(m, rank=5, iters=2)  # default key=None
+    keyed = _lowrank_approx(m, rank=5, iters=2, key=jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(keyed))
+
+
+def test_key_threading_quality_unchanged_on_fixed_seeds():
+    """A threaded key changes the sketch, not the truncation quality."""
+    u = jax.random.normal(jax.random.PRNGKey(5), (40, 3))
+    v = jax.random.normal(jax.random.PRNGKey(6), (3, 50))
+    m = u @ v
+    for s in (7, 8, 9):   # exact recovery for any sketch seed
+        a = _lowrank_approx(m, rank=3, iters=3, key=jax.random.PRNGKey(s))
+        np.testing.assert_allclose(a, m, rtol=1e-4, atol=1e-4)
+    full = jax.random.normal(jax.random.PRNGKey(10), (64, 64))
+    base = float(jnp.linalg.norm(full - _lowrank_approx(full, 8, iters=3)))
+    for s in (11, 12):
+        e = float(jnp.linalg.norm(full - _lowrank_approx(
+            full, 8, iters=3, key=jax.random.PRNGKey(s))))
+        assert abs(e - base) < 0.2 * base
+
+
+def test_upload_key_is_deterministic_and_decorrelates():
+    g = {"w": jnp.zeros((48, 48)), "s": jnp.zeros((48, 2, 40, 40))}
+    local = jax.tree.map(
+        lambda l: jax.random.normal(jax.random.PRNGKey(13), l.shape), g)
+    k = jax.random.PRNGKey(14)
+    th1, r1 = lowrank_upload(local, g, rank=2, key=k)
+    th2, r2 = lowrank_upload(local, g, rank=2, key=k)
+    for a, b in zip(jax.tree.leaves(th1), jax.tree.leaves(th2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    th3, _ = lowrank_upload(local, g, rank=2, key=jax.random.PRNGKey(15))
+    assert not np.array_equal(np.asarray(th1["w"]), np.asarray(th3["w"]))
+    # residual identity holds under any key
+    for t, l_, gg, r in zip(jax.tree.leaves(th1), jax.tree.leaves(local),
+                            jax.tree.leaves(g), jax.tree.leaves(r1)):
+        np.testing.assert_allclose(np.asarray(t - gg) + np.asarray(r),
+                                   np.asarray(l_ - gg), atol=1e-5)
+
+
 def test_upload_roundtrip_and_residual():
     cfg = cnn.VGGConfig().reduced()
     g = cnn.init_params(jax.random.PRNGKey(0), cfg)

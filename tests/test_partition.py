@@ -1,0 +1,250 @@
+"""Trainable-partition seam: split/merge semantics, partition=None
+bit-identity across all drivers, frozen-base invariance, driver
+equivalence under a partition, compression composition, and the adapter
+workload's uplink cut."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.partition import (ParamPartition, leaf_paths,
+                                  partition_counts)
+from repro.data import (FederatedData, iid_partition, lm_federated,
+                        make_image_dataset, make_lm_dataset)
+from repro.federated import (CompressionConfig, FLConfig, run_training,
+                             run_training_scan)
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.models.lora import inject_lora, lora_partition
+
+
+def _mlp_params(key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 3)
+    return {
+        "l1": {"w": jax.random.normal(ks[0], (192, 16)) * 0.02,
+               "b": jnp.zeros((16,))},
+        "head": {"w": jax.random.normal(ks[1], (16, 10)) * 0.1,
+                 "b": jnp.zeros((10,))},
+    }
+
+
+def _loss(params, batch):
+    x = batch["images"].reshape(batch["images"].shape[0], -1)
+    h = jax.nn.relu(x @ params["l1"]["w"] + params["l1"]["b"])
+    logits = h @ params["head"]["w"] + params["head"]["b"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, batch["labels"][:, None],
+                                axis=-1).mean()
+
+
+@pytest.fixture(scope="module")
+def fed_data():
+    train, _ = make_image_dataset(num_train=160, num_test=16, size=8,
+                                  seed=1)
+    parts = iid_partition(train.ys, 8, seed=0)
+    return FederatedData(train.xs, train.ys, parts)
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ----------------------------------------------------------------------
+# ParamPartition semantics
+# ----------------------------------------------------------------------
+def test_split_merge_roundtrip():
+    params = _mlp_params()
+    part = ParamPartition.by_keys(params, ["head"])
+    trainable, frozen = part.split(params)
+    assert set(trainable) == {"head"} and set(frozen) == {"l1"}
+    _assert_trees_equal(part.merge(trainable, frozen), params)
+    # by_substring: path-segment match, not substring-anywhere
+    part2 = ParamPartition.by_substring(params, "head")
+    assert part2.trainable_paths == part.trainable_paths
+
+
+def test_partition_validation_errors():
+    params = _mlp_params()
+    with pytest.raises(KeyError):
+        ParamPartition.by_keys(params, ["nope"])
+    with pytest.raises(ValueError, match="at least one trainable"):
+        ParamPartition.by_substring(params, "nomatch")
+    with pytest.raises(ValueError, match="both trainable and frozen"):
+        ParamPartition(trainable_paths=("head/w",),
+                       frozen_paths=("head/w", "head/b"))
+    part = ParamPartition.by_keys(params, ["head"])
+    with pytest.raises(ValueError):    # unclassified leaves
+        part.split({**params, "extra": {"w": jnp.zeros((2,))}})
+    with pytest.raises(TypeError):
+        ParamPartition.build(jnp.zeros((3,)), lambda p, l: True)
+
+
+def test_partition_counts_and_paths():
+    params = _mlp_params()
+    part = ParamPartition.by_keys(params, ["head"])
+    c = partition_counts(part, params)
+    assert c["trainable_params"] == 16 * 10 + 10
+    assert c["frozen_params"] == 192 * 16 + 16
+    assert c["trainable_bytes"] == 4 * c["trainable_params"]
+    paths = dict(leaf_paths(params))
+    assert set(paths) == {"l1/w", "l1/b", "head/w", "head/b"}
+
+
+def test_flconfig_rejects_non_partition():
+    with pytest.raises(TypeError, match="partition"):
+        FLConfig(algo="fedldf", clients_per_round=4, partition="head")
+
+
+# ----------------------------------------------------------------------
+# partition=None bit-identity (the refactor's core contract)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("algo", ["fedldf", "fedavg"])
+def test_all_trainable_partition_is_bit_identical_to_none(fed_data, algo):
+    """partition=None and an all-trainable partition must produce the SAME
+    trajectory bitwise, in every driver — the seam may not perturb the
+    unpartitioned engine."""
+    params = _mlp_params()
+    full = ParamPartition.by_keys(params, ["head", "l1"])
+    kw = dict(algo=algo, num_clients=8, clients_per_round=4, top_n=2,
+              batch_per_client=8)
+    for runner, extra in ((run_training, {"sampler": "jax"}),
+                          (run_training_scan, {})):
+        p0, l0 = runner(params, _loss, fed_data, FLConfig(**kw),
+                        rounds=3, seed=3, **extra)
+        pF, lF = runner(params, _loss, fed_data,
+                        FLConfig(partition=full, **kw),
+                        rounds=3, seed=3, **extra)
+        _assert_trees_equal(p0, pF)
+        assert l0.losses == lF.losses
+    # sequential-clients scan engine
+    p0, _ = run_training_scan(params, _loss, fed_data,
+                              FLConfig(mode="scan", **kw), rounds=3, seed=3)
+    pF, _ = run_training_scan(params, _loss, fed_data,
+                              FLConfig(mode="scan", partition=full, **kw),
+                              rounds=3, seed=3)
+    _assert_trees_equal(p0, pF)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs 2 devices")
+def test_all_trainable_partition_is_bit_identical_to_none_mesh(fed_data):
+    from repro.launch.mesh import make_client_mesh
+    params = _mlp_params()
+    full = ParamPartition.by_keys(params, ["head", "l1"])
+    kw = dict(algo="fedldf", num_clients=8, clients_per_round=4, top_n=2,
+              batch_per_client=8, mesh=make_client_mesh(2))
+    p0, _ = run_training(params, _loss, fed_data, FLConfig(**kw),
+                         rounds=3, seed=3, sampler="jax")
+    pF, _ = run_training(params, _loss, fed_data,
+                         FLConfig(partition=full, **kw),
+                         rounds=3, seed=3, sampler="jax")
+    _assert_trees_equal(p0, pF)
+
+
+# ----------------------------------------------------------------------
+# Partitioned training: frozen invariance + driver equivalence
+# ----------------------------------------------------------------------
+def test_partitioned_frozen_stays_frozen_and_drivers_agree(fed_data):
+    params = _mlp_params()
+    part = ParamPartition.by_keys(params, ["head"])
+    kw = dict(algo="fedldf", num_clients=8, clients_per_round=4, top_n=1,
+              batch_per_client=8, partition=part)
+    ph, lh = run_training(params, _loss, fed_data, FLConfig(**kw),
+                          rounds=3, seed=3, sampler="jax")
+    ps, _ = run_training_scan(params, _loss, fed_data, FLConfig(**kw),
+                              rounds=3, seed=3)
+    # frozen leaves bitwise untouched; trainable leaves moved
+    _assert_trees_equal(ph["l1"], params["l1"])
+    assert not np.array_equal(np.asarray(ph["head"]["w"]),
+                              np.asarray(params["head"]["w"]))
+    for a, b in zip(jax.tree.leaves(ph), jax.tree.leaves(ps)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-6)
+    # sequential-clients engine agrees too
+    pq, _ = run_training_scan(params, _loss, fed_data,
+                              FLConfig(mode="scan", **kw), rounds=3, seed=3)
+    for a, b in zip(jax.tree.leaves(ph), jax.tree.leaves(pq)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-6)
+    # the ledger charges trainable bytes only: head = (16·10+10)·4 B
+    per_round = lh.meter.fedavg_uplink_bytes / 3
+    assert per_round == 4 * (16 * 10 + 10) * 4
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs 2 devices")
+def test_partitioned_mesh_matches_flat(fed_data):
+    from repro.launch.mesh import make_client_mesh
+    params = _mlp_params()
+    part = ParamPartition.by_keys(params, ["head"])
+    kw = dict(algo="fedldf", num_clients=8, clients_per_round=4, top_n=1,
+              batch_per_client=8, partition=part)
+    ph, _ = run_training(params, _loss, fed_data, FLConfig(**kw),
+                         rounds=3, seed=3, sampler="jax")
+    pm, _ = run_training(params, _loss, fed_data,
+                         FLConfig(mesh=make_client_mesh(2), **kw),
+                         rounds=3, seed=3, sampler="jax")
+    _assert_trees_equal(ph["l1"], pm["l1"])
+    for a, b in zip(jax.tree.leaves(ph), jax.tree.leaves(pm)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_partition_composes_with_packed_compression(fed_data):
+    params = _mlp_params()
+    part = ParamPartition.by_keys(params, ["head"])
+    fl = FLConfig(algo="fedldf", num_clients=8, clients_per_round=4,
+                  top_n=1, batch_per_client=8, partition=part,
+                  compression=CompressionConfig(bits=8,
+                                                error_feedback=True))
+    pc, lc = run_training(params, _loss, fed_data, fl, rounds=3, seed=3,
+                          sampler="jax")
+    _assert_trees_equal(pc["l1"], params["l1"])
+    # packed int8 uplink of the trainable subset is below its fp32 bytes
+    assert lc.meter.uplink_bytes < lc.meter.fedavg_uplink_bytes
+
+
+# ----------------------------------------------------------------------
+# Adapter workload: the acceptance-number check
+# ----------------------------------------------------------------------
+def test_lora_adapter_uplink_at_least_10x_below_full_model():
+    cfg = ModelConfig(name="tiny", family="dense", d_model=64,
+                      num_layers=2, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=128, param_dtype="float32",
+                      compute_dtype="float32")
+    tokens, domains = make_lm_dataset(num_sequences=64, seq_len=17,
+                                      vocab=128, num_domains=4, seed=0)
+    data = lm_federated(tokens, domains, 4)
+    params = inject_lora(jax.random.PRNGKey(1),
+                         tfm.init_params(jax.random.PRNGKey(0), cfg),
+                         rank=2)
+    part = lora_partition(params)
+    fl = FLConfig(algo="fedavg", num_clients=4, clients_per_round=2,
+                  top_n=1, batch_per_client=4, partition=part)
+    trained, log = run_training(params, tfm.make_lm_loss(cfg), data, fl,
+                                rounds=2, seed=0, sampler="jax")
+    full_bytes = sum(l.size * l.dtype.itemsize
+                     for l in jax.tree.leaves(params))
+    full_up = full_bytes * 2                 # K=2 clients, full model
+    adapter_up = log.meter.uplink_bytes / 2  # per round
+    assert adapter_up * 10 <= full_up
+    # the frozen transformer base is returned bitwise intact
+    _, frozen0 = part.split(params)
+    _, frozenT = part.split(trained)
+    _assert_trees_equal(frozen0, frozenT)
+
+
+def test_telemetry_meta_records_partition(fed_data, tmp_path):
+    from repro.federated import TelemetryConfig
+    import json
+    params = _mlp_params()
+    part = ParamPartition.by_keys(params, ["head"])
+    led = str(tmp_path / "ledger.jsonl")
+    fl = FLConfig(algo="fedldf", num_clients=8, clients_per_round=4,
+                  top_n=1, batch_per_client=8, partition=part,
+                  telemetry=TelemetryConfig(ledger_path=led))
+    run_training(params, _loss, fed_data, fl, rounds=2, seed=0,
+                 sampler="jax")
+    run_rec = [json.loads(l) for l in open(led)
+               if json.loads(l).get("kind") == "run"][0]
+    assert run_rec["units"] == ["head"]        # trainable-subset units only
+    assert run_rec["partition"]["trainable_params"] == 16 * 10 + 10
+    assert run_rec["partition"]["frozen_params"] == 192 * 16 + 16

@@ -384,3 +384,25 @@ def test_flcfg_equivalent_spellings_share_strategy_behaviour():
     legacy = make_strategy(dc.replace(
         cfg, compression=CompressionConfig(bits=8, fused=False)))
     assert legacy.transforms_upload and not legacy.packed_upload
+
+
+def test_scan_compression_error_names_config_and_drivers():
+    """The scan-engine refusal must tell the user what to reach for: the
+    config class spelling and every driver that does support the packed
+    uplink."""
+    with pytest.raises(NotImplementedError) as ei:
+        FLConfig(algo="fedldf", mode="scan",
+                 compression=CompressionConfig(bits=8))
+    msg = str(ei.value)
+    for needle in ("CompressionConfig", "mode='vmap'", "mesh",
+                   "run_training", "run_training_scan"):
+        assert needle in msg, needle
+    # the direct build_round_scan entry point refuses with the same message
+    from repro.federated import build_round_scan
+    params = cnn.init_params(jax.random.PRNGKey(0), CFG)
+    umap = UnitMap.build(params)
+    fl = FLConfig(algo="fedldf", clients_per_round=4,
+                  compression=CompressionConfig(bits=8))
+    with pytest.raises(NotImplementedError) as ei2:
+        build_round_scan(_loss, umap, fl)
+    assert str(ei2.value) == msg
