@@ -1,0 +1,138 @@
+"""Two-process ``jax.distributed`` smoke test (CPU, fail-soft).
+
+    PYTHONPATH=src python -m benchmarks.dist_smoke [--processes 2]
+        [--devices-per-process 2] [--timeout 180]
+
+Validates the multi-host seam of the FL round engine end to end with real
+OS processes on one machine: the parent picks a free coordinator port and
+spawns N children; every child
+
+1. calls :func:`repro.launch.mesh.init_distributed` (the idempotent
+   ``jax.distributed.initialize`` wrapper),
+2. builds the global mesh with ``make_client_mesh(processes=N)`` — the
+   ``jax.make_mesh`` path over the GLOBAL device list, where each host's
+   local devices sit contiguous on the 'clients' axis,
+3. runs a tiny ``shard_map`` psum over the 'clients' axis and checks the
+   result equals the global device count on every process.
+
+**Fail-soft**: cross-process CPU collectives depend on the jax build
+(some jaxlib wheels report "Multiprocess computations aren't implemented
+on the CPU backend"). When distributed init never completes, children
+hang, or the backend declares collectives unimplemented, the parent
+prints ``SKIP`` and exits 0 — CI runs this as a canary (ci.yml
+``dist-smoke``, ``continue-on-error``), not a gate. A wrong *result* (or
+any other child error) after a successful distributed init does fail
+(exit 1): that is the seam actually broken, not an unsupported
+environment.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import subprocess
+import sys
+
+_SKIP_EXIT = 42      # child → parent: environment can't run this, not a bug
+
+
+def _child(coordinator: str, processes: int, pid: int) -> int:
+    from repro.launch.mesh import (CLIENT_AXIS, init_distributed,
+                                   make_client_mesh, shard_map_norep)
+    info = init_distributed(coordinator_address=coordinator,
+                            num_processes=processes, process_id=pid)
+    print(f"[child {pid}] init ok: {info}", flush=True)
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    mesh = make_client_mesh(processes=processes)
+    d = int(mesh.shape[CLIENT_AXIS])
+    try:
+        total = shard_map_norep(
+            lambda x: jax.lax.psum(x, CLIENT_AXIS), mesh,
+            in_specs=P(CLIENT_AXIS), out_specs=P())(jnp.ones((d,)))
+        got = float(jax.device_get(total))
+    except Exception as e:                          # noqa: BLE001
+        # e.g. "Multiprocess computations aren't implemented on the CPU
+        # backend" (jaxlib builds without CPU cross-process collectives):
+        # environment, not the engine — signal SKIP to the parent
+        if "implement" in str(e).lower():
+            print(f"[child {pid}] SKIP: {e}", flush=True)
+            return _SKIP_EXIT
+        raise
+    assert got == d, f"psum over {CLIENT_AXIS} gave {got}, want {d}"
+    print(f"[child {pid}] psum over {d} global devices across "
+          f"{info['process_count']} processes: OK", flush=True)
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--processes", type=int, default=2)
+    ap.add_argument("--devices-per-process", type=int, default=2)
+    ap.add_argument("--timeout", type=float, default=180.0)
+    ap.add_argument("--child", type=int, default=None,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--coordinator", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+
+    if args.child is not None:
+        return _child(args.coordinator, args.processes, args.child)
+
+    with socket.socket() as s:        # free port on loopback
+        s.bind(("127.0.0.1", 0))
+        port = s.getsockname()[1]
+    coordinator = f"127.0.0.1:{port}"
+
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if "--xla_force_host_platform_device_count" not in f]
+    env["XLA_FLAGS"] = " ".join(
+        flags + ["--xla_force_host_platform_device_count="
+                 f"{args.devices_per_process}"]).strip()
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+
+    procs = [subprocess.Popen(
+        [sys.executable, "-m", "benchmarks.dist_smoke",
+         "--processes", str(args.processes), "--child", str(i),
+         "--coordinator", coordinator],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        for i in range(args.processes)]
+    outs, codes = [], []
+    for p in procs:
+        try:
+            out, _ = p.communicate(timeout=args.timeout)
+        except subprocess.TimeoutExpired:
+            p.kill()
+            out, _ = p.communicate()
+            out += "\n[parent] child timed out"
+        outs.append(out)
+        codes.append(p.returncode)
+
+    if all(c == 0 for c in codes):
+        for out in outs:
+            print(out, end="")
+        print(f"dist_smoke: OK ({args.processes} processes x "
+              f"{args.devices_per_process} devices)")
+        return 0
+    # children distinguish environment limits (init never completed, or
+    # collectives unimplemented → _SKIP_EXIT) from real engine failures
+    if all(c == 0 or c == _SKIP_EXIT for c in codes) or \
+            not all("init ok" in out for out in outs):
+        print("dist_smoke: SKIP — jax.distributed unusable in this "
+              f"environment (child exits {codes}); first child output:")
+        print(outs[0], end="")
+        return 0
+    for out in outs:
+        print(out, end="")
+    print("dist_smoke: FAILED after successful distributed init")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -137,8 +137,15 @@ def summarize(results, out=sys.stdout):
             # that omit fedavg itself (for fedavg, up == base -> 0.000)
             base = sum(r["comm"]["fedavg_uplink"] for r in rounds_rec)
             avg = up / max(len(rounds_rec), 1)
-            print(f"# {fig},{algo},{err:.4f},{up/1e6:.1f},{avg/1e6:.2f},"
-                  f"{1 - up / base:.3f}", file=out)
+            line = (f"# {fig},{algo},{err:.4f},{up/1e6:.1f},{avg/1e6:.2f},"
+                    f"{1 - up / base:.3f}")
+            # mesh runs with the two-tier reduce also record the static
+            # aggregation-traffic split per round (see core.comm)
+            c = rounds_rec[-1]["comm"]
+            if c.get("agg_tiers", 1) > 1:
+                line += (f",agg2tier:intra={c['agg_intra_bytes']/1e6:.2f}MB"
+                         f"/cross={c['agg_cross_bytes']/1e6:.2f}MB")
+            print(line, file=out)
 
 
 if __name__ == "__main__":

@@ -70,8 +70,13 @@ def main(argv=None) -> None:
         # keep the client-heavy shape even in CI (smaller N is overhead-
         # bound and the speedup number stops meaning anything); trim
         # rounds/reps instead
+        # the population row (N=1e6 synthetic, K=4096) rides this section;
+        # CI shrinks N/K so the smoke job stays minutes, not tens of them
         results["shard"] = shard_engine_bench.run(
-            rounds=10 if args.ci else 30, reps=1 if args.ci else 5)
+            rounds=10 if args.ci else 30, reps=1 if args.ci else 5,
+            pop_clients=100_000 if args.ci else 1_000_000,
+            pop_cohort=512 if args.ci else 4096,
+            pop_rounds=2 if args.ci else 3)
         if not results["shard"].get("equiv_ok"):
             raise SystemExit("[shard] sharded-vs-unsharded equivalence "
                              "FAILED")

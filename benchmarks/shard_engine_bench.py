@@ -30,7 +30,19 @@ configuration where params (and the EF residual store) live 1/M per device
 — reporting both rounds/sec and the at-rest per-device param bytes, and
 re-checks sharded-vs-unsharded trajectory equivalence on a fixed seed
 (fp32 tolerance — reduction order differs across mesh sizes) including the
-2-D mesh.
+2-D mesh, the hierarchical two-tier reduce (``FLConfig(agg_group_size=...)``
+at group sizes 2 and 4), and the sample-sharded placement
+(``shard_samples=True`` vs replicated placement of the same affinity
+layout, grouped cohort in both).
+
+**Population scale** (``population_run`` / ``--pop-clients``): an
+N=1e6-client, K=4096-cohort synthetic round on the widest mesh with
+sample-axis sharding + client→device affinity and the hierarchical
+aggregation tier, reporting per-round wall-clock, per-tier bytes/host
+(intra-group vs cross-group — the flat reduce funnels all D−1 payloads
+through one root, the two-tier reduce caps any host at 2·(G−1) ring
+payloads), and at-rest dataset bytes/device (~1/D shrink vs replicated
+placement, asserted).
 """
 from __future__ import annotations
 
@@ -81,11 +93,11 @@ def _make_task(num_clients: int, batch: int, seed: int = 0):
         FederatedData(train.xs, train.ys, parts))
     params = _mlp_params(jax.random.PRNGKey(seed))
 
-    def flcfg(mesh):
+    def flcfg(mesh, **kw):
         return FLConfig(algo="fedldf", num_clients=num_clients,
                         clients_per_round=num_clients, top_n=4,
                         local_steps=LOCAL_STEPS, batch_per_client=batch,
-                        mesh=mesh)
+                        mesh=mesh, **kw)
 
     return params, _mlp_loss, shards, flcfg
 
@@ -115,7 +127,9 @@ def _mesh_sizes(limit: int) -> list[int]:
 
 
 def run_local(devices: int = 8, rounds: int = 30, reps: int = 5,
-              clients: int = 64, batch: int = 16, out=sys.stdout) -> dict:
+              clients: int = 64, batch: int = 16,
+              pop_clients: int = 1_000_000, pop_cohort: int = 4096,
+              pop_rounds: int = 3, out=sys.stdout) -> dict:
     """Run in-process (requires >= ``devices`` JAX devices)."""
     import jax
     from repro.federated import run_training_scan
@@ -131,8 +145,9 @@ def run_local(devices: int = 8, rounds: int = 30, reps: int = 5,
                "devices": len(jax.devices()), "mesh": {}}
     sizes = _mesh_sizes(min(devices, len(jax.devices())))
 
-    def runner(mesh):
-        return lambda: run_training_scan(params, loss, shards, flcfg(mesh),
+    def runner(mesh, **kw):
+        return lambda: run_training_scan(params, loss, shards,
+                                         flcfg(mesh, **kw),
                                          rounds=rounds, seed=0)
 
     rates = _best_rates(
@@ -183,49 +198,209 @@ def run_local(devices: int = 8, rounds: int = 30, reps: int = 5,
               f"param bytes/device {dev_b} vs {tot_b} replicated "
               f"({dev_b / tot_b:.2f}x)", file=out)
 
+    # hierarchical two-tier reduce at the widest mesh (group-local psum +
+    # group-leader ppermute ring; FLConfig(agg_group_size=...)). On forced
+    # CPU devices the rate should track the flat psum — the win the tier
+    # buys (per-HOST cross-group traffic capped at O(G) instead of the
+    # root's O(D)) is reported by the population run's byte split below.
+    if widest > 1:
+        gs = max(1, widest // 4)
+        wide_mesh = make_client_mesh(widest)
+        results["hier_rate"] = _best_rates(
+            [runner(wide_mesh, agg_group_size=gs)], rounds, reps)[0]
+        results["hier"] = {"group_size": gs, "devices": widest,
+                           "rate": results["hier_rate"]}
+        print(f"mesh={widest} two-tier (group={gs})  : "
+              f"{results['hier_rate']:8.1f} rounds/s "
+              f"({results['hier_rate'] / results['mesh'][str(widest)]:.2f}x "
+              "vs flat psum)", file=out)
+
     results["equiv_max_diff"] = equivalence_check(out=out)
     results["equiv_ok"] = results["equiv_max_diff"] < EQUIV_TOL
+
+    if pop_clients:
+        results["population"] = population_run(
+            devices=devices, clients=pop_clients, cohort=pop_cohort,
+            rounds=pop_rounds, out=out)
     return results
 
 
 def equivalence_check(rounds: int = 3, out=sys.stdout) -> float:
     """Sharded (every power-of-2 mesh) vs unsharded trajectories, fixed
-    seed. Fp32 tolerance: cross-device psum changes fp reduction order."""
+    seed. Fp32 tolerance: cross-device psum changes fp reduction order.
+    Also pins the hierarchical two-tier reduce (group sizes 2/4 at the
+    widest mesh) against the same unsharded reference, and the
+    sample-sharded placement against replicated placement of the same
+    affinity layout (grouped cohort in both — same participants, so the
+    trajectories must agree bit-for-bit up to fp32 gather order)."""
     import jax
     import jax.numpy as jnp
     from repro.federated import run_training_scan
     from repro.launch.mesh import make_client_mesh
 
+    def tree_diff(a, b):
+        return max(float(jnp.abs(x - y).max()) for x, y in
+                   zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
     params, loss, shards, flcfg = _make_task(16, 8)
     params_ref, _ = run_training_scan(params, loss, shards, flcfg(None),
                                       rounds=rounds, seed=0)
     worst = 0.0
-    meshes = [(d, 1) for d in _mesh_sizes(len(jax.devices()))]
-    ndev = len(jax.devices())     # 2-D ('clients', 'model') FSDP point,
-    if ndev % 2 == 0 and 16 % (ndev // 2) == 0:   # K=16 clients above
-        meshes.append((ndev, 2))
-    for d, model in meshes:
-        ps, _ = run_training_scan(params, loss, shards,
-                                  flcfg(make_client_mesh(d, model=model)),
-                                  rounds=rounds, seed=0)
-        diff = max(float(jnp.abs(a - b).max()) for a, b in
-                   zip(jax.tree.leaves(params_ref), jax.tree.leaves(ps)))
+    ndev = len(jax.devices())
+    meshes = [(d, 1, 0) for d in _mesh_sizes(ndev)]
+    # 2-D ('clients', 'model') FSDP point (K=16 clients above)
+    if ndev % 2 == 0 and 16 % (ndev // 2) == 0:
+        meshes.append((ndev, 2, 0))
+    # hierarchical two-tier reduce at the widest mesh
+    meshes.extend((ndev, 1, gs) for gs in (1, 2, 4)
+                  if gs < ndev and ndev % gs == 0)
+    for d, model, gs in meshes:
+        ps, _ = run_training_scan(
+            params, loss, shards,
+            flcfg(make_client_mesh(d, model=model), agg_group_size=gs),
+            rounds=rounds, seed=0)
+        diff = tree_diff(params_ref, ps)
         worst = max(worst, diff)
         status = "OK" if diff < EQUIV_TOL else "FAIL"
         label = f"{d}" if model == 1 else f"{d // model}x{model}"
+        if gs:
+            label += f" group={gs}"
         print(f"equivalence mesh={label}: max|sharded-unsharded| = "
               f"{diff:.2e}  [{status}]", file=out)
+
+    # sample-axis sharding: sharded vs replicated placement of the SAME
+    # affinity layout (the drivers draw the cohort per group for both, so
+    # the participant trajectory is identical — only data placement moves)
+    if ndev > 1 and 16 % ndev == 0:
+        mesh = make_client_mesh(ndev)
+        aff = shards.with_affinity(ndev)
+        p_rep, _ = run_training_scan(params, loss, aff.place(mesh),
+                                     flcfg(mesh), rounds=rounds, seed=0)
+        p_shd, _ = run_training_scan(params, loss, aff,
+                                     flcfg(mesh, shard_samples=True),
+                                     rounds=rounds, seed=0)
+        diff = tree_diff(p_rep, p_shd)
+        worst = max(worst, diff)
+        status = "OK" if diff < EQUIV_TOL else "FAIL"
+        print(f"equivalence mesh={ndev} sample-sharded vs replicated "
+              f"placement: max diff = {diff:.2e}  [{status}]", file=out)
     return worst
 
 
+def population_run(devices: int = 8, clients: int = 1_000_000,
+                   cohort: int = 4096, rounds: int = 3,
+                   out=sys.stdout) -> dict:
+    """Population-scale synthetic round: N≈1e6 clients, K≈4096 cohort.
+
+    One sample per client (16 features), tiny MLP — the point is the
+    *round machinery* at population N, not the model: vectorized shard
+    construction, per-group cohort draw, sample-sharded placement with
+    client→device affinity, device-local gather, and the two-tier reduce.
+    Reports per-round wall-clock (flat vs hierarchical reduce), at-rest
+    dataset bytes/device (~1/D shrink vs replicated placement — enforced),
+    and the static per-tier aggregation-traffic split per round.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import agg_tier_bytes
+    from repro.data import ClientShards, FederatedData
+    from repro.federated import FLConfig, run_training_scan
+    from repro.launch.mesh import make_client_mesh
+
+    d = min(devices, len(jax.devices()))
+    clients -= clients % d          # N % D (affinity groups, FLConfig)
+    cohort -= cohort % d            # K % G (per-group cohort draw)
+    d_in, hidden = 16, 8
+    rng = np.random.default_rng(0)
+    xs = rng.standard_normal((clients, d_in), dtype=np.float32)
+    ys = rng.integers(0, N_CLASSES, size=clients).astype(np.int32)
+    print(f"[population] N={clients:,} clients, K={cohort:,} cohort, "
+          f"{d} devices, {rounds} rounds", file=out)
+
+    t0 = time.perf_counter()
+    parts = list(np.arange(clients, dtype=np.int64).reshape(clients, 1))
+    shards = ClientShards.from_federated(FederatedData(xs, ys, parts))
+    build_s = time.perf_counter() - t0
+    print(f"[population] ClientShards.from_federated: {build_s:.2f}s "
+          f"(vectorized; the per-client loop was O(N*S))", file=out)
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    params = {"l1": {"w": jax.random.normal(ks[0], (d_in, hidden)) * 0.1,
+                     "b": jnp.zeros((hidden,))},
+              "head": {"w": jax.random.normal(ks[1],
+                                              (hidden, N_CLASSES)) * 0.1,
+                       "b": jnp.zeros((N_CLASSES,))}}
+    mesh = make_client_mesh(d)
+    gs = max(1, d // 4)             # stand-in for devices-per-host
+
+    # at-rest dataset footprint: replicated vs sample-sharded placement
+    rep_b = shards.place(mesh).bytes_per_device()
+    shd = shards.place(mesh, shard_samples=True)
+    shd_b = shd.bytes_per_device()
+    shrink = rep_b / shd_b
+    print(f"[population] at-rest dataset bytes/device: {shd_b:,} sharded "
+          f"vs {rep_b:,} replicated ({shrink:.1f}x shrink, D={d})",
+          file=out)
+    if d > 1 and shrink < 0.9 * d:
+        raise RuntimeError(
+            f"sample-axis sharding shrank at-rest bytes only {shrink:.2f}x "
+            f"on {d} devices (expected ~{d}x)")
+
+    def tr(**kw):
+        cfg = FLConfig(algo="fedldf", num_clients=clients,
+                       clients_per_round=cohort, top_n=2, local_steps=1,
+                       batch_per_client=1, mesh=mesh, shard_samples=True,
+                       **kw)
+        return lambda: run_training_scan(params, _mlp_loss, shd, cfg,
+                                         rounds=rounds, seed=0)
+
+    flat_rate, hier_rate = _best_rates(
+        [tr(), tr(agg_group_size=gs)], rounds, reps=2)
+    print(f"[population] flat reduce      : {1 / flat_rate:8.3f} s/round",
+          file=out)
+    print(f"[population] two-tier (g={gs})  : {1 / hier_rate:8.3f} s/round",
+          file=out)
+
+    # static per-round aggregation-traffic split (payload = param bytes,
+    # the Eq. 5 numerator tree riding the fused reduce)
+    pbytes = float(sum(np.asarray(x).nbytes
+                       for x in jax.tree.leaves(params)))
+    tiers = {"flat": agg_tier_bytes(pbytes, d, 0),
+             "hier": agg_tier_bytes(pbytes, d, gs)}
+    for name, t in tiers.items():
+        print(f"[population] {name} bytes/round: "
+              f"intra={t['agg_intra_bytes']:,.0f} "
+              f"cross={t['agg_cross_bytes']:,.0f} "
+              f"busiest-host cross={t['agg_cross_bytes_per_host']:,.0f}",
+              file=out)
+    ratio = (tiers["hier"]["agg_cross_bytes_per_host"]
+             / max(tiers["flat"]["agg_cross_bytes_per_host"], 1.0))
+    print(f"[population] busiest-host cross-tier traffic: {ratio:.2f}x "
+          "of flat (lower = the root is no longer the ceiling)", file=out)
+    return {"clients": clients, "cohort": cohort, "devices": d,
+            "group_size": gs, "rounds": rounds, "build_s": build_s,
+            "rate": hier_rate, "flat_rate": flat_rate,
+            "sec_per_round": 1.0 / hier_rate,
+            "at_rest_bytes_per_device": shd_b,
+            "at_rest_bytes_replicated": rep_b,
+            "at_rest_shrink": shrink,
+            "tier_bytes": tiers,
+            "cross_host_ratio": ratio}
+
+
 def run(devices: int = 8, rounds: int = 30, reps: int = 5,
-        clients: int = 64, batch: int = 16, out=sys.stdout) -> dict:
+        clients: int = 64, batch: int = 16,
+        pop_clients: int = 1_000_000, pop_cohort: int = 4096,
+        pop_rounds: int = 3, out=sys.stdout) -> dict:
     """Entry point for benchmarks/run.py: re-exec with forced devices when
     this process cannot see enough of them (JAX device count is fixed at
     first import; only a fresh process can change it)."""
     import jax
     if len(jax.devices()) >= devices:
-        return run_local(devices, rounds, reps, clients, batch, out=out)
+        return run_local(devices, rounds, reps, clients, batch,
+                         pop_clients=pop_clients, pop_cohort=pop_cohort,
+                         pop_rounds=pop_rounds, out=out)
 
     env = dict(os.environ)
     flags = env.get("XLA_FLAGS", "")
@@ -241,7 +416,9 @@ def run(devices: int = 8, rounds: int = 30, reps: int = 5,
     cmd = [sys.executable, "-m", "benchmarks.shard_engine_bench",
            "--devices", str(devices), "--rounds", str(rounds),
            "--reps", str(reps), "--clients", str(clients),
-           "--batch", str(batch), "--json", with_json]
+           "--batch", str(batch), "--pop-clients", str(pop_clients),
+           "--pop-cohort", str(pop_cohort),
+           "--pop-rounds", str(pop_rounds), "--json", with_json]
     print(f"# re-exec with XLA_FLAGS={env['XLA_FLAGS']!r}", file=out)
     proc = subprocess.run(cmd, env=env, stdout=subprocess.PIPE,
                           stderr=subprocess.STDOUT, text=True,
@@ -268,10 +445,16 @@ def main(argv=None) -> int:
     ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--clients", type=int, default=64)
     ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--pop-clients", type=int, default=1_000_000,
+                    help="population-scale run size (0 disables)")
+    ap.add_argument("--pop-cohort", type=int, default=4096)
+    ap.add_argument("--pop-rounds", type=int, default=3)
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
     results = run(devices=args.devices, rounds=args.rounds, reps=args.reps,
-                  clients=args.clients, batch=args.batch)
+                  clients=args.clients, batch=args.batch,
+                  pop_clients=args.pop_clients, pop_cohort=args.pop_cohort,
+                  pop_rounds=args.pop_rounds)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2)

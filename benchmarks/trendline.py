@@ -49,6 +49,7 @@ TRACKED = {
     ("engine", "speedup"): "[engine] scan-vs-host speedup",
     ("shard", "unsharded"): "[shard] unsharded rounds/sec",
     ("shard", "speedup"): "[shard] widest-mesh speedup",
+    ("shard", "hier_rate"): "[shard] two-tier reduce rounds/sec",
 }
 
 
@@ -70,6 +71,10 @@ def extract(results: dict) -> dict[str, float]:
     model = (results.get("shard") or {}).get("model_mesh") or {}
     if isinstance(model.get("rate"), (int, float)):
         out["shard.model_mesh.rate"] = float(model["rate"])
+    pop = (results.get("shard") or {}).get("population") or {}
+    for key in ("rate", "flat_rate", "at_rest_shrink"):
+        if isinstance(pop.get(key), (int, float)):
+            out[f"shard.pop.{key}"] = float(pop[key])
     return out
 
 

@@ -2,9 +2,10 @@
 from repro.core import (aggregation, comm, compress, convergence, fedadp,
                         lowrank, partition, selection, units, wire)
 from repro.core.aggregation import (aggregate_stacked, fedavg_stacked,
-                                    streaming_add, streaming_finalize,
-                                    streaming_init, unit_weights)
-from repro.core.comm import CommMeter, round_comm
+                                    hierarchical_psum, streaming_add,
+                                    streaming_finalize, streaming_init,
+                                    unit_weights)
+from repro.core.comm import CommMeter, agg_tier_bytes, round_comm
 from repro.core.convergence import BoundParams, asymptotic_gap, contraction_A
 from repro.core.partition import ParamPartition, partition_counts
 from repro.core.selection import (client_dropout, full_participation,
@@ -16,9 +17,10 @@ from repro.core.wire import (UNIT_HEADER_BYTES, CompressionConfig,
 __all__ = [
     "aggregation", "comm", "compress", "convergence", "fedadp", "lowrank",
     "partition", "selection", "units", "wire",
-    "aggregate_stacked", "fedavg_stacked", "streaming_add",
-    "streaming_finalize", "streaming_init", "unit_weights",
-    "CommMeter", "round_comm", "BoundParams", "asymptotic_gap",
+    "aggregate_stacked", "fedavg_stacked", "hierarchical_psum",
+    "streaming_add", "streaming_finalize", "streaming_init", "unit_weights",
+    "CommMeter", "agg_tier_bytes", "round_comm", "BoundParams",
+    "asymptotic_gap",
     "contraction_A", "client_dropout", "full_participation",
     "random_per_layer", "topn_divergence", "ParamPartition", "UnitMap",
     "UNIT_HEADER_BYTES", "CompressionConfig", "PackedPayload",

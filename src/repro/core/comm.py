@@ -76,6 +76,55 @@ def round_comm(selection: jnp.ndarray, umap: UnitMap, *,
     }
 
 
+def agg_tier_bytes(payload_bytes: float, axis_size: int,
+                   group_size: int = 0) -> dict:
+    """Per-round aggregation-traffic split for the (optionally two-tier)
+    cross-device reduce (:func:`repro.core.aggregation.hierarchical_psum`).
+
+    ``payload_bytes`` is ONE device's reduce payload P (the Eq. 5
+    numerator tree riding the fused psum — on a 2-D mesh the 1/M
+    'model'-axis slice). ``group_size`` of 0 or ``axis_size`` means the
+    flat single psum. All values are static per configuration (pure
+    topology × payload arithmetic, deliberately NOT riding the psum so the
+    flat path's compiled round stays byte-identical):
+
+      agg_payload_bytes        — P
+      agg_intra_bytes          — total bytes/round on intra-group links
+                                 (tier-1: non-leader partials funnel to a
+                                 group leader; 0 for the flat reduce)
+      agg_cross_bytes          — total bytes/round crossing group
+                                 boundaries (flat: all D−1 partials funnel
+                                 to the root; hier: the leaders' ring
+                                 moves G·(G−1) payloads)
+      agg_cross_bytes_per_host — the busiest participant's share of the
+                                 cross-tier traffic, send+receive (flat:
+                                 the root takes 2·(D−1)·P; hier: every
+                                 ring member moves 2·(G−1)·P) — the
+                                 "server bandwidth is no longer the
+                                 ceiling" number
+      agg_groups               — number of tier-1 groups G
+      agg_tiers                — 1 (flat) or 2 (hierarchical)
+    """
+    d = int(axis_size)
+    gs = int(group_size) or d
+    if d % gs:
+        raise ValueError(f"agg_tier_bytes: group_size={gs} must divide "
+                         f"axis_size={d}")
+    p = float(payload_bytes)
+    num_groups = d // gs
+    if num_groups <= 1:     # flat: one rendezvous, root absorbs everything
+        return {"agg_payload_bytes": p,
+                "agg_intra_bytes": 0.0,
+                "agg_cross_bytes": (d - 1) * p,
+                "agg_cross_bytes_per_host": 2.0 * (d - 1) * p,
+                "agg_groups": 1.0, "agg_tiers": 1.0}
+    return {"agg_payload_bytes": p,
+            "agg_intra_bytes": float(d - num_groups) * p,
+            "agg_cross_bytes": float(num_groups * (num_groups - 1)) * p,
+            "agg_cross_bytes_per_host": 2.0 * (num_groups - 1) * p,
+            "agg_groups": float(num_groups), "agg_tiers": 2.0}
+
+
 # ----------------------------------------------------------------------
 # Device-side accumulator (scan engine): a dict of float32 scalars that
 # lives in the lax.scan carry, so no per-round device→host pull is needed.

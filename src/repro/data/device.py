@@ -13,9 +13,22 @@ round batch is a pure gather:
    a local index draw ``j ~ U[0, |D_c|)`` per (client, sample) followed by
    ``xs[part_idx[clients, j]]``.
 
+Population scale adds a second layout, **sample-axis sharding with pinned
+client→device affinity** (:meth:`ClientShards.with_affinity` /
+``place(mesh, shard_samples=True)``): samples are permuted into contiguous
+per-device blocks keyed by a static client→group assignment (group ``g``
+owns clients ``[g·N/G, (g+1)·N/G)``), ``xs``/``ys`` are sharded
+``P('clients')`` along the sample axis — at-rest dataset bytes/device drop
+~1/D — and :meth:`gather` switches to a device-local index path inside
+``shard_map`` so the round-batch gather never crosses devices. The cohort
+must then be drawn per affinity group
+(:func:`repro.federated.sampling.sample_clients_grouped`) so device ``g``'s
+positional K/D participant rows are exactly clients whose data lives on it.
+
 ``ClientShards`` is registered as a pytree so it can be passed through
 ``jax.jit`` boundaries without baking the dataset into the jaxpr as a
-constant.
+constant. The affinity metadata (``group_block``, ``num_groups``) is static
+aux data — engines branch on it at trace time.
 """
 from __future__ import annotations
 
@@ -36,6 +49,12 @@ class ClientShards:
     part_sizes: jnp.ndarray  # (N,) true shard sizes, int32
     x_key: str = "images"
     y_key: str = "labels"
+    # affinity layout metadata (static): samples re-ordered into
+    # ``num_groups`` contiguous blocks of ``group_block`` rows, block g
+    # holding exactly the samples of clients [g·N/G, (g+1)·N/G).
+    # group_block == 0 means no affinity layout (the original order).
+    group_block: int = 0
+    num_groups: int = 1
 
     @property
     def num_clients(self) -> int:
@@ -45,45 +64,157 @@ class ClientShards:
         """|D_k| vector (float32) for the Eq. 5 weighting."""
         return self.part_sizes.astype(jnp.float32)
 
+    def bytes_per_device(self) -> int:
+        """At-rest dataset bytes held by ONE device (xs + ys).
+
+        Replicated placement: the full arrays. Sample-sharded placement
+        (``place(mesh, shard_samples=True)``): one 1/D block — the ~1/D
+        shrink the population benchmark asserts.
+        """
+        total = 0
+        for arr in (self.xs, self.ys):
+            shards = getattr(arr, "addressable_shards", None)
+            total += (shards[0].data.nbytes if shards
+                      else np.asarray(arr).nbytes)
+        return int(total)
+
     # ------------------------------------------------------------------
     @staticmethod
-    def from_federated(fldata: FederatedData) -> "ClientShards":
-        smax = max(len(p) for p in fldata.parts)
-        n = len(fldata.parts)
-        idx = np.zeros((n, smax), dtype=np.int32)
-        for i, p in enumerate(fldata.parts):
-            idx[i, :len(p)] = p
-            if len(p) < smax:  # cyclic pad — every slot is a valid sample
-                idx[i, len(p):] = p[np.arange(smax - len(p)) % len(p)]
+    def from_federated(fldata: FederatedData,
+                       max_shard_cap: int | None = None) -> "ClientShards":
+        """Build device shards from a host partition (vectorized).
+
+        The padded index matrix is assembled with one numpy gather instead
+        of a Python loop over N clients (the loop was O(N·S) host time —
+        minutes at N=1e6). Identical output: row ``c`` is
+        ``parts[c][m % |D_c|]`` for every column ``m``, i.e. the real
+        indices followed by the same cyclic padding as before.
+
+        ``max_shard_cap`` bounds the padded width S (and memory: the dense
+        matrix is N×S int32, sized by the single largest shard without a
+        cap). Clients larger than the cap keep only their first
+        ``max_shard_cap`` sample indices and report the capped size in
+        ``part_sizes`` — so sampling and the Eq. 5 |D_k| weights both see
+        the truncated shard (documented trade-off for long-tailed
+        partitions at population scale).
+        """
+        parts = fldata.parts
+        n = len(parts)
+        sizes = np.fromiter((len(p) for p in parts), dtype=np.int64,
+                            count=n)
+        smax = int(sizes.max())
+        if max_shard_cap is not None:
+            if max_shard_cap < 1:
+                raise ValueError(f"max_shard_cap must be >= 1, got "
+                                 f"{max_shard_cap}")
+            smax = min(smax, int(max_shard_cap))
+        eff = np.minimum(sizes, smax)
+        flat = np.concatenate([np.asarray(p) for p in parts])
+        starts = np.concatenate(([0], np.cumsum(sizes)[:-1]))
+        cols = np.arange(smax, dtype=np.int64)[None, :]
+        # row c, col m -> parts[c][m % eff[c]]  (cyclic pad, every slot a
+        # valid sample; zero-size shards never occur via partitioners but
+        # are guarded so the modulo stays defined)
+        take = starts[:, None] + cols % np.maximum(eff, 1)[:, None]
+        idx = flat[take].astype(np.int32)
         return ClientShards(
             xs=jnp.asarray(fldata.xs), ys=jnp.asarray(fldata.ys),
             part_idx=jnp.asarray(idx),
-            part_sizes=jnp.asarray([len(p) for p in fldata.parts],
-                                   dtype=jnp.int32),
+            part_sizes=jnp.asarray(eff.astype(np.int32)),
             x_key=fldata.x_key, y_key=fldata.y_key)
 
     # ------------------------------------------------------------------
-    def place(self, mesh) -> "ClientShards":
-        """Replicate the dataset over a device mesh (sharded engine).
+    def with_affinity(self, num_groups: int) -> "ClientShards":
+        """Re-layout samples into contiguous per-group blocks (host-side).
 
-        The global arrays are *replicated* (PartitionSpec()) rather than
-        sharded: any device may need any sample, because the per-round
-        participant set is a random subset of all N clients. With a local
-        replica everywhere, the round-batch gather partitions cleanly over
-        the 'clients' axis — each device reads only its own K/D clients'
-        rows and no cross-device traffic happens during data loading. On a
-        2-D ('clients', 'model') mesh the dataset stays replicated along
-        'model' too (only params and the EF residual store are
-        model-sharded; sharding the *sample* axis is the follow-on tracked
-        in ROADMAP.md).
+        Group ``g`` owns clients ``[g·N/G, (g+1)·N/G)``; its block holds
+        those clients' samples back to back, padded to the largest group's
+        sample total ``B`` so the sample axis splits evenly over a
+        ``'clients'`` mesh axis (padding rows are copies of row 0, never
+        addressed — ``part_idx`` only references real sample positions).
+        ``part_idx`` is rewritten into the new coordinates with the same
+        cyclic-pad contract, so :meth:`gather` returns identical batch
+        VALUES for any ``(clients, key)`` — the re-layout is pure data
+        movement. Idempotent for a matching ``num_groups``.
+        """
+        n = self.num_clients
+        if num_groups <= 1:
+            return self
+        if self.num_groups == num_groups and self.group_block:
+            return self
+        if n % num_groups:
+            raise ValueError(
+                f"with_affinity: num_clients={n} must divide into "
+                f"{num_groups} groups")
+        xs = np.asarray(self.xs)
+        ys = np.asarray(self.ys)
+        part_idx = np.asarray(self.part_idx)
+        sizes = np.asarray(self.part_sizes).astype(np.int64)
+        cpg = n // num_groups
+        group_sizes = sizes.reshape(num_groups, cpg).sum(axis=1)
+        blk = int(group_sizes.max())
+        # destination of each client's first sample: group base + the
+        # within-group exclusive cumulative sum of shard sizes
+        csum = np.cumsum(sizes) - sizes
+        gstart = csum.reshape(num_groups, cpg)[:, 0]
+        dest0 = (np.repeat(np.arange(num_groups, dtype=np.int64) * blk, cpg)
+                 + (csum - np.repeat(gstart, cpg)))
+        smax = part_idx.shape[1]
+        cols = np.arange(smax, dtype=np.int64)[None, :]
+        valid = cols < sizes[:, None]
+        dest = dest0[:, None] + cols
+        order = np.zeros(num_groups * blk, dtype=np.int64)
+        order[dest[valid]] = part_idx[valid]
+        new_idx = (dest0[:, None]
+                   + cols % np.maximum(sizes, 1)[:, None]).astype(np.int32)
+        return ClientShards(
+            xs=jnp.asarray(xs[order]), ys=jnp.asarray(ys[order]),
+            part_idx=jnp.asarray(new_idx), part_sizes=self.part_sizes,
+            x_key=self.x_key, y_key=self.y_key,
+            group_block=blk, num_groups=num_groups)
+
+    # ------------------------------------------------------------------
+    def place(self, mesh, shard_samples: bool = False) -> "ClientShards":
+        """Place the dataset over a device mesh (sharded engine).
+
+        ``shard_samples=False`` (default): the global arrays are
+        *replicated* (PartitionSpec()) — any device may need any sample,
+        because the per-round participant set is a random subset of all N
+        clients. With a local replica everywhere, the round-batch gather
+        partitions cleanly over the 'clients' axis with no cross-device
+        traffic, but every device pays the full dataset's memory.
+
+        ``shard_samples=True``: the sample axis is SHARDED 1/D along
+        'clients' — :meth:`with_affinity` first permutes samples into
+        contiguous per-device blocks keyed by the static client→device
+        assignment (applied on the fly here if not already laid out), then
+        ``xs``/``ys`` are placed ``P('clients')`` on axis 0 while the
+        (small) index matrices stay replicated. At-rest dataset
+        bytes/device drop ~1/D; :meth:`gather` reads only device-local
+        rows when the participant cohort is drawn per affinity group
+        (:func:`repro.federated.sampling.sample_clients_grouped` — the
+        drivers switch automatically on ``num_groups > 1``). On a 2-D
+        ('clients', 'model') mesh the samples stay replicated along
+        'model' (only params and the EF residual store are model-sharded).
         """
         from jax.sharding import NamedSharding, PartitionSpec
         rep = NamedSharding(mesh, PartitionSpec())
+        src = self
+        put = {"xs": rep, "ys": rep}
+        if shard_samples:
+            from repro.launch.mesh import CLIENT_AXIS, client_mesh_size
+            d = client_mesh_size(mesh)
+            if d > 1:
+                src = self.with_affinity(d)
+                row = NamedSharding(mesh, PartitionSpec(CLIENT_AXIS))
+                put = {"xs": row, "ys": row}
         return ClientShards(
-            xs=jax.device_put(self.xs, rep), ys=jax.device_put(self.ys, rep),
-            part_idx=jax.device_put(self.part_idx, rep),
-            part_sizes=jax.device_put(self.part_sizes, rep),
-            x_key=self.x_key, y_key=self.y_key)
+            xs=jax.device_put(src.xs, put["xs"]),
+            ys=jax.device_put(src.ys, put["ys"]),
+            part_idx=jax.device_put(src.part_idx, rep),
+            part_sizes=jax.device_put(src.part_sizes, rep),
+            x_key=src.x_key, y_key=src.y_key,
+            group_block=src.group_block, num_groups=src.num_groups)
 
     # ------------------------------------------------------------------
     def gather(self, clients: jnp.ndarray, batch: int,
@@ -105,6 +236,15 @@ class ClientShards:
         (and biases) the drawn values. The (pure, integer) gathers
         downstream may be partitioned freely — partitioning cannot change
         their values.
+
+        With an affinity layout matching the mesh's 'clients' size and a
+        per-group participant cohort, the sample gather itself runs
+        device-LOCAL: a ``shard_map`` splits ``xs``/``ys`` and the drawn
+        global indices over 'clients', each device rebases its rows by its
+        ``axis_index · group_block`` offset and takes from its local block
+        only — no cross-device traffic even when the dataset is
+        sample-sharded. Values are identical to the global take (the
+        rebased index addresses the same sample).
         """
         k = clients.shape[0]
         sizes = self.part_sizes[clients]                        # (K,)
@@ -118,18 +258,43 @@ class ClientShards:
         else:
             j = draw(key, sizes)
         gidx = self.part_idx[clients[:, None], j]               # (K, batch)
+
+        if mesh is not None and self.group_block and self.num_groups > 1:
+            from repro.launch.mesh import (CLIENT_AXIS, client_mesh_size,
+                                           shard_map_norep)
+            if (self.num_groups == client_mesh_size(mesh)
+                    and k % self.num_groups == 0):
+                from jax.sharding import PartitionSpec as P
+                blk = self.group_block
+
+                def local_take(xs_loc, ys_loc, gidx_loc):
+                    g = jax.lax.axis_index(CLIENT_AXIS)
+                    loc = gidx_loc - g * blk
+                    return (jnp.take(xs_loc, loc, axis=0),
+                            jnp.take(ys_loc, loc, axis=0))
+
+                xb, yb = shard_map_norep(
+                    local_take, mesh,
+                    in_specs=(P(CLIENT_AXIS), P(CLIENT_AXIS),
+                              P(CLIENT_AXIS)),
+                    out_specs=(P(CLIENT_AXIS), P(CLIENT_AXIS)))(
+                        self.xs, self.ys, gidx)
+                return {self.x_key: xb, self.y_key: yb}
+
         return {self.x_key: jnp.take(self.xs, gidx, axis=0),
                 self.y_key: jnp.take(self.ys, gidx, axis=0)}
 
 
 def _shards_flatten(s: ClientShards):
-    return ((s.xs, s.ys, s.part_idx, s.part_sizes), (s.x_key, s.y_key))
+    return ((s.xs, s.ys, s.part_idx, s.part_sizes),
+            (s.x_key, s.y_key, s.group_block, s.num_groups))
 
 
 def _shards_unflatten(aux, children):
     xs, ys, part_idx, part_sizes = children
     return ClientShards(xs=xs, ys=ys, part_idx=part_idx,
-                        part_sizes=part_sizes, x_key=aux[0], y_key=aux[1])
+                        part_sizes=part_sizes, x_key=aux[0], y_key=aux[1],
+                        group_block=aux[2], num_groups=aux[3])
 
 
 jax.tree_util.register_pytree_node(ClientShards, _shards_flatten,

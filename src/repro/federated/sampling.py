@@ -9,6 +9,11 @@ Two interchangeable samplers:
   ``run_training(sampler="jax")`` so the two drivers see *identical*
   participant sets for a given seed.
 
+- :func:`sample_clients_grouped` — per-affinity-group sampling for
+  sample-sharded datasets (``ClientShards.place(shard_samples=True)``): the
+  K-cohort is drawn ``K/G`` per contiguous client group so the positional
+  device split matches data placement.
+
 :func:`round_keys` defines the per-round key schedule shared by both JAX
 paths: one fold_in per round, split into (client, batch, algorithm) streams.
 """
@@ -35,6 +40,37 @@ def sample_clients_jax(key: jax.Array, num_clients: int,
     """
     k = max(1, min(k, num_clients))
     return jax.random.choice(key, num_clients, shape=(k,), replace=False)
+
+
+def sample_clients_grouped(key: jax.Array, num_clients: int, k: int,
+                           num_groups: int) -> jnp.ndarray:
+    """Per-affinity-group participant sampling (jit/scan-safe).
+
+    With sample-axis sharding
+    (:meth:`repro.data.ClientShards.place` ``shard_samples=True``) group
+    ``g`` — i.e. device ``g`` of the 'clients' mesh axis — holds exactly
+    the samples of clients ``[g·N/G, (g+1)·N/G)``. The cohort must respect
+    that placement: this draws ``k/G`` distinct clients from each group's
+    contiguous range and concatenates in group order, so the sharded
+    round's positional row split (:func:`local_rows`: device ``i`` owns
+    rows ``[i·K/D, (i+1)·K/D)``) hands every device only clients whose
+    data is device-local — the round-batch gather never crosses devices.
+
+    Deterministic in ``key`` (one ``fold_in`` per group);
+    ``num_groups=1`` degenerates to :func:`sample_clients_jax` exactly, so
+    ungrouped shards keep their bit-identical trajectories.
+    """
+    if num_groups <= 1:
+        return sample_clients_jax(key, num_clients, k)
+    if num_clients % num_groups or k % num_groups:
+        raise ValueError(
+            f"sample_clients_grouped: N={num_clients} and K={k} must both "
+            f"divide into {num_groups} affinity groups")
+    cpg, kpg = num_clients // num_groups, k // num_groups
+    draws = [jax.random.choice(jax.random.fold_in(key, g), cpg,
+                               shape=(kpg,), replace=False) + g * cpg
+             for g in range(num_groups)]
+    return jnp.concatenate(draws)
 
 
 def local_rows(arr: jnp.ndarray, axis_name: str, shard_size: int

@@ -81,6 +81,7 @@ from repro.core.wire import CompressionConfig
 from repro.data.device import ClientShards
 from repro.federated.client import make_local_update
 from repro.federated.sampling import (local_rows, round_keys, sample_clients,
+                                      sample_clients_grouped,
                                       sample_clients_jax)
 from repro.federated.strategies import (FedADPOptions, FedLAMAOptions,
                                         FedLPOptions, get_strategy_cls,
@@ -167,6 +168,20 @@ class FLConfig:
     # additionally FSDP-shards param leaves + the EF residual store 1/M per
     # device. None = single-device round, unchanged.
     mesh: Optional[Mesh] = None
+    # hierarchical two-tier aggregation (mesh only): the round's fused
+    # reduce becomes a group-local psum over blocks of agg_group_size
+    # consecutive 'clients'-axis devices followed by a ring all-reduce
+    # across group leaders (lax.ppermute rotations; see
+    # repro.core.aggregation.hierarchical_psum). 0 (default) keeps the
+    # single flat psum — the compiled round is byte-identical to the
+    # pre-tier engine. 1 = pure ring all-reduce over all devices.
+    agg_group_size: int = 0
+    # sample-axis sharding (mesh only): the drivers place ClientShards
+    # with shard_samples=True — samples are permuted into per-device
+    # blocks by the static client→device affinity, the cohort is drawn
+    # per affinity group, and the round-batch gather reads device-local
+    # rows only. At-rest dataset bytes/device drop ~1/D.
+    shard_samples: bool = False
     # observability: in-jit metric taps + JSONL round ledger + profiling
     # hooks (see repro.telemetry). None (default) is the zero-cost path:
     # compiled rounds, scan carries, and fixed-seed trajectories are
@@ -306,6 +321,27 @@ class FLConfig:
             d = client_mesh_size(self.mesh)
             assert self.clients_per_round % d == 0, \
                 f"K={self.clients_per_round} must divide over {d} devices"
+            if self.agg_group_size:
+                gs = self.agg_group_size
+                if not (1 <= gs <= d and d % gs == 0):
+                    raise ValueError(
+                        f"FLConfig.agg_group_size={gs} must be in [1, {d}] "
+                        f"and divide the 'clients' axis size {d}")
+            if self.shard_samples and self.num_clients % d:
+                raise ValueError(
+                    f"FLConfig.shard_samples needs N={self.num_clients} "
+                    f"divisible by the {d} 'clients'-axis devices (the "
+                    "static client→device affinity assigns N/D clients "
+                    "per device)")
+        else:
+            if self.agg_group_size:
+                raise ValueError(
+                    "FLConfig.agg_group_size is a mesh-round knob; pass "
+                    "mesh=make_client_mesh(...) too")
+            if self.shard_samples:
+                raise ValueError(
+                    "FLConfig.shard_samples is a mesh-round knob; pass "
+                    "mesh=make_client_mesh(...) too")
         if self.telemetry is not None and \
                 not isinstance(self.telemetry, TelemetryConfig):
             raise TypeError(
@@ -461,6 +497,17 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig,
     kloc = k // d
     tele = flcfg.telemetry
     taps_on = tele is not None and tele.taps
+    # hierarchical two-tier reduce: group-local psum + group-leader ring.
+    # gs == 0 (default) or gs == d keeps the single flat psum — reduce_
+    # lowers to exactly the pre-tier collective, byte-identical rounds.
+    gs = flcfg.agg_group_size
+    hier = bool(gs) and gs < d
+
+    def reduce_(vals):
+        if hier:
+            return agg.hierarchical_psum(vals, ax, axis_size=d,
+                                         group_size=gs)
+        return jax.lax.psum(vals, ax)
 
     def body(pspecs, sspecs, fspecs, params, batch, data_sizes, key, state,
              frozen):
@@ -566,16 +613,24 @@ def _build_round_vmap_sharded(local_update, umap: UnitMap, flcfg: FLConfig,
         if taps_on and state is not None and state.get("client"):
             tap_client_sq = taps_mod.client_sqsums(state["client"])
         if tap_client_sq is not None:
-            (parts, denom), loss_sum, comm, tap_client_sq = jax.lax.psum(
+            (parts, denom), loss_sum, comm, tap_client_sq = reduce_(
                 ((parts, denom_loc), losses.sum(), comm_add,
-                 tap_client_sq), ax)
+                 tap_client_sq))
         else:
-            (parts, denom), loss_sum, comm = jax.lax.psum(
-                ((parts, denom_loc), losses.sum(), comm_add), ax)
+            (parts, denom), loss_sum, comm = reduce_(
+                ((parts, denom_loc), losses.sum(), comm_add))
         new_params = strategy.psum_finalize(parts, denom, umap,
                                             params_shard, params_shard)
         comm["savings_frac"] = 1.0 - comm["uplink_total"] / \
             comm["fedavg_uplink"]
+        # per-tier aggregation-traffic split: static topology × payload
+        # arithmetic added AFTER the reduce (deliberately not riding the
+        # psum, so the flat path's collective payload — and trajectory —
+        # stays byte-identical to the pre-tier engine). Payload = this
+        # device's Eq. 5 numerator tree (1/M slice on a 2-D mesh).
+        for n_, v in comm_mod.agg_tier_bytes(umap.total_bytes / m, d,
+                                             gs if hier else 0).items():
+            comm[n_] = jnp.float32(v)
         loss = loss_sum / k
         metrics = {"loss": loss, "comm": comm, "selection": selection}
         if state is not None:
@@ -909,7 +964,15 @@ def _run_meta(flcfg: FLConfig, *, driver: str, umap: UnitMap, seed: int,
     the *trainable* units, e.g. per-adapter-layer ``blocks/<d>`` labels,
     and ``partition`` carries the trainable/frozen param+byte totals)."""
     mesh = flcfg.mesh
+    agg_meta = None
+    if mesh is not None:
+        d = client_mesh_size(mesh)
+        gs = flcfg.agg_group_size if (
+            flcfg.agg_group_size and flcfg.agg_group_size < d) else d
+        agg_meta = {"group_size": int(gs), "num_groups": int(d // gs),
+                    "tiers": 1 if gs == d else 2}
     return {"run_id": run_id, "driver": driver, "algo": flcfg.algo,
+            "agg": agg_meta, "shard_samples": bool(flcfg.shard_samples),
             "partition": partition_info,
             "mode": flcfg.mode, "sampler": sampler, "seed": seed,
             "start_round": start_round, "rounds": rounds,
@@ -1034,9 +1097,14 @@ def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
         shards = (fldata if isinstance(fldata, ClientShards)
                   else ClientShards.from_federated(fldata))
         if flcfg.mesh is not None:
-            shards = shards.place(flcfg.mesh)
+            shards = shards.place(flcfg.mesh,
+                                  shard_samples=flcfg.shard_samples)
         all_sizes_dev = shards.data_sizes()
         base_key = jax.random.PRNGKey(seed)
+    elif flcfg.shard_samples:
+        raise ValueError(
+            "FLConfig.shard_samples needs sampler='jax' (the host sampler "
+            "never builds device-resident ClientShards)")
     else:
         rng = np.random.default_rng(seed)
         all_sizes = fldata.data_sizes()
@@ -1052,8 +1120,12 @@ def run_training(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
             wall0 = time.perf_counter() if sample_sys else None
             if sampler == "jax":
                 ck, bk, key = round_keys(base_key, t)
-                clients = sample_clients_jax(ck, flcfg.num_clients,
-                                             flcfg.clients_per_round)
+                # affinity-laid-out shards (num_groups > 1) switch the
+                # cohort draw to per-group sampling, matching the scan
+                # engine's trajectory on the same shards
+                clients = sample_clients_grouped(ck, flcfg.num_clients,
+                                                 flcfg.clients_per_round,
+                                                 shards.num_groups)
                 batch = shards.gather(clients, flcfg.batch_per_client, bk)
                 sizes = all_sizes_dev[clients]
             else:
@@ -1166,18 +1238,22 @@ def _build_block_fn(loss_fn, umap: UnitMap, flcfg: FLConfig):
     def one_round(carry, t, shards, all_sizes, base_key, frozen):
         params, state, acc = carry
         ck, bk, ak = round_keys(base_key, t)
+        # shards.num_groups is static pytree aux: affinity-laid-out shards
+        # flip the cohort draw to per-group sampling at trace time (a
+        # num_groups of 1 lowers to exactly sample_clients_jax).
+        def sample(k_):
+            return sample_clients_grouped(k_, flcfg.num_clients,
+                                          flcfg.clients_per_round,
+                                          shards.num_groups)
+
         if mesh is not None:
             # run the RNG draws replicated inside shard_map: the
             # non-partitionable threefry lowering changes values when XLA
             # shards it (see ClientShards.gather / replicated_rng) — the
             # participant draw gets the same treatment as the batch draw.
-            clients = replicated_rng(
-                lambda k_: sample_clients_jax(k_, flcfg.num_clients,
-                                              flcfg.clients_per_round),
-                mesh)(ck)
+            clients = replicated_rng(sample, mesh)(ck)
         else:
-            clients = sample_clients_jax(ck, flcfg.num_clients,
-                                         flcfg.clients_per_round)
+            clients = sample(ck)
         batch = shards.gather(clients, flcfg.batch_per_client, bk, mesh=mesh)
         sizes = all_sizes[clients]
         if client_spec is not None:
@@ -1275,7 +1351,8 @@ def run_training_scan(params: Pytree, loss_fn, fldata, flcfg: FLConfig,
             frozen = jax.device_put(
                 frozen,
                 to_named(fl_param_specs(frozen, flcfg.mesh), flcfg.mesh))
-        shards = shards.place(flcfg.mesh)
+        shards = shards.place(flcfg.mesh,
+                              shard_samples=flcfg.shard_samples)
     merged = ((lambda p: p) if partition is None
               else (lambda p: partition.merge(p, frozen)))
     if jax.default_backend() in ("tpu", "gpu"):

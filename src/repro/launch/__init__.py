@@ -4,8 +4,9 @@ NOTE: repro.launch.dryrun must be imported/run first in its own process —
 it sets XLA_FLAGS for 512 placeholder devices before any JAX import.
 """
 from repro.launch.mesh import (CLIENT_AXIS, client_mesh_size, data_axes,
-                               make_client_mesh, make_host_mesh,
-                               make_production_mesh)
+                               init_distributed, make_client_mesh,
+                               make_host_mesh, make_production_mesh)
 
 __all__ = ["CLIENT_AXIS", "client_mesh_size", "data_axes",
-           "make_client_mesh", "make_host_mesh", "make_production_mesh"]
+           "init_distributed", "make_client_mesh", "make_host_mesh",
+           "make_production_mesh"]

@@ -49,7 +49,52 @@ def make_host_mesh(data: int = 2, model: int = 2):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
-def make_client_mesh(num_devices: int | None = None, model: int = 1):
+def init_distributed(coordinator_address: str | None = None,
+                     num_processes: int | None = None,
+                     process_id: int | None = None,
+                     local_device_ids=None) -> dict:
+    """Idempotent ``jax.distributed.initialize`` wrapper.
+
+    Call ONCE per process, before any other JAX use, to let the 'clients'
+    mesh axis span hosts (``make_client_mesh(processes=...)``). Arguments
+    left ``None`` fall back to jax's own environment autodetection
+    (``JAX_COORDINATOR_ADDRESS`` etc. / cluster plugins). Already
+    initialized (``jax.process_count() > 1`` or a repeated call) is a
+    no-op, so drivers and benchmarks can call it unconditionally.
+
+    Returns ``{"process_id", "process_count", "device_count"}`` for
+    logging. Raises ``RuntimeError`` on backends where multi-process init
+    is unsupported — callers that only *prefer* distributed mode (e.g.
+    ``benchmarks/dist_smoke.py``) catch it and fall back to single-process.
+    """
+    try:
+        # probe WITHOUT touching the backend: jax.process_count() would
+        # initialize XLA, after which jax.distributed.initialize refuses
+        # to run ("must be called before any JAX computations")
+        from jax._src.distributed import global_state
+        already = global_state.client is not None
+    except ImportError:        # private module moved: just attempt init
+        already = False
+    if not already:
+        kwargs = {k: v for k, v in
+                  (("coordinator_address", coordinator_address),
+                   ("num_processes", num_processes),
+                   ("process_id", process_id),
+                   ("local_device_ids", local_device_ids))
+                  if v is not None}
+        try:
+            jax.distributed.initialize(**kwargs)
+        except RuntimeError as e:
+            # a repeated initialize is the one benign failure
+            if "already" not in str(e).lower():
+                raise
+    return {"process_id": jax.process_index(),
+            "process_count": jax.process_count(),
+            "device_count": len(jax.devices())}
+
+
+def make_client_mesh(num_devices: int | None = None, model: int = 1,
+                     processes: int | None = None):
     """Device mesh for the FL round engine.
 
     ``num_devices`` counts the TOTAL devices used (``None`` = every visible
@@ -62,6 +107,16 @@ def make_client_mesh(num_devices: int | None = None, model: int = 1):
     ``(num_devices // M, M)``: the 'clients' factor still splits the round's
     client stack, while the 'model' factor FSDP-shards parameter leaves and
     the error-feedback residual store (see federated/server.py).
+
+    ``processes``: multi-host mode. After :func:`init_distributed`,
+    ``jax.devices()`` is the GLOBAL device list; passing the expected
+    process count builds the mesh with ``jax.make_mesh`` over all global
+    devices, whose device ordering keeps each host's local devices
+    contiguous on the 'clients' axis — so a hierarchical aggregation tier
+    with ``group_size = devices_per_host``
+    (``FLConfig(agg_group_size=...)``) reduces intra-host first and only
+    group leaders' ring traffic crosses the network. ``processes=None``/1
+    keeps the original single-process construction byte-identical.
     """
     devs = jax.devices()
     n = len(devs) if num_devices is None else num_devices
@@ -70,12 +125,22 @@ def make_client_mesh(num_devices: int | None = None, model: int = 1):
             f"make_client_mesh: asked for {n} devices, have {len(devs)} "
             "(on CPU, force more with "
             "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    multi = processes is not None and processes > 1
+    if multi and jax.process_count() != processes:
+        raise ValueError(
+            f"make_client_mesh: processes={processes} but "
+            f"jax.process_count()={jax.process_count()} — call "
+            "repro.launch.mesh.init_distributed() in every process first")
     if model <= 1:
+        if multi and n == len(devs):
+            return jax.make_mesh((n,), (CLIENT_AXIS,))
         return jax.sharding.Mesh(np.asarray(devs[:n]), (CLIENT_AXIS,))
     if n % model:
         raise ValueError(
             f"make_client_mesh: model={model} must divide the total device "
             f"count {n} (mesh shape is (clients={n}//{model}, model={model}))")
+    if multi and n == len(devs):
+        return jax.make_mesh((n // model, model), (CLIENT_AXIS, MODEL_AXIS))
     grid = np.asarray(devs[:n]).reshape(n // model, model)
     return jax.sharding.Mesh(grid, (CLIENT_AXIS, MODEL_AXIS))
 

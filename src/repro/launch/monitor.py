@@ -20,7 +20,9 @@ run segment:
 - strategy-state trajectories for any tapped ``state_*`` vectors
   (FedLAMA's interval/ttl, EF residual norms, ...);
 - a **bytes-per-round summary**: uplink payload/feedback/total and
-  savings vs FedAvg, from the per-round comm profiles, plus loss start→
+  savings vs FedAvg, from the per-round comm profiles — plus, for mesh
+  runs, the aggregation-tier traffic split (intra-group vs cross-group vs
+  busiest-host bytes of the flat or two-tier reduce) — plus loss start→
   end, wall-clock and peak-memory stats when sampled, and eval points.
 
 Stdlib + numpy only (no JAX) so it can run on a login node against
@@ -104,6 +106,12 @@ def render_run(seg, out=sys.stdout, bins: int = 60) -> None:
         mesh = meta.get("mesh")
         mesh_s = ("x".join(str(v) for v in mesh.values())
                   if mesh else "single-device")
+        agg = meta.get("agg")
+        if agg and agg.get("tiers", 1) > 1:
+            mesh_s += (f" (2-tier agg: {agg['num_groups']} groups of "
+                       f"{agg['group_size']})")
+        if meta.get("shard_samples"):
+            mesh_s += " sample-sharded"
         print(f"== run {meta.get('run_id') or meta.get('algo', '?')} — "
               f"algo={meta.get('algo', '?')} driver={meta.get('driver', '?')}"
               f" mode={meta.get('mode', '?')} mesh={mesh_s} "
@@ -167,6 +175,15 @@ def render_run(seg, out=sys.stdout, bins: int = 60) -> None:
           file=out)
     print(f"   uplink/round: {sparkline(bin_series(up_total, bins))}",
           file=out)
+    # aggregation-tier traffic split (mesh rounds; static per config)
+    if comm and "agg_cross_bytes" in comm[-1]:
+        c = comm[-1]
+        tiers = int(c.get("agg_tiers", 1))
+        print(f"   agg traffic/round ({tiers}-tier reduce): intra-group "
+              f"{c.get('agg_intra_bytes', 0.0) / 1e6:.3f}MB, cross-group "
+              f"{c['agg_cross_bytes'] / 1e6:.3f}MB, busiest host "
+              f"{c.get('agg_cross_bytes_per_host', 0.0) / 1e6:.3f}MB",
+              file=out)
     loss = np.array([r["loss"] for r in rounds_rec])
     print(f"   loss: {sparkline(bin_series(loss, bins))}  "
           f"{loss[0]:.4f} -> {loss[-1]:.4f}", file=out)

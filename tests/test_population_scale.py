@@ -1,0 +1,319 @@
+"""Population-scale seams: sample-axis sharding, affinity layout,
+grouped sampling, and the hierarchical two-tier aggregation reduce.
+
+Host-side pieces (vectorized shard construction, affinity re-layout,
+grouped cohort draw, tier byte accounting, config validation) run on any
+device count. The mesh cases — device-local gather determinism and
+hierarchical-vs-flat engine equivalence — need 8 forced devices
+(``REPRO_TEST_DEVICES=8``; they skip cleanly otherwise). Tolerances
+follow tests/test_shard_engine.py: fp32-tight where the reduction order
+changes, exact where only data placement moves.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.round_engine_bench import EQUIV_TOL
+from repro.core import CompressionConfig, agg_tier_bytes, hierarchical_psum
+from repro.data import (ClientShards, FederatedData, iid_partition,
+                        make_image_dataset)
+from repro.federated import FLConfig, run_training_scan
+from repro.federated.sampling import (sample_clients_grouped,
+                                      sample_clients_jax)
+from repro.launch.mesh import CLIENT_AXIS, make_client_mesh, shard_map_norep
+
+ATOL = EQUIV_TOL
+needs8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 devices; set REPRO_TEST_DEVICES=8 (or XLA_FLAGS="
+           "--xla_force_host_platform_device_count=8)")
+
+
+# ----------------------------------------------------------------------
+# vectorized shard construction (from_federated without the O(N*S) loop)
+# ----------------------------------------------------------------------
+def _ragged_fldata(n_clients=7, seed=0):
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, 6, size=n_clients)
+    total = int(sizes.sum())
+    xs = rng.standard_normal((total, 4)).astype(np.float32)
+    ys = rng.integers(0, 3, size=total).astype(np.int32)
+    perm = rng.permutation(total)
+    splits = np.cumsum(sizes)[:-1]
+    return FederatedData(xs, ys, np.split(perm, splits))
+
+
+def _loop_reference(parts, smax=None):
+    """The original per-client construction: row c = parts[c][m % |D_c|]."""
+    width = smax or max(len(p) for p in parts)
+    idx = np.zeros((len(parts), width), dtype=np.int32)
+    for c, p in enumerate(parts):
+        p = p[:width]
+        for m in range(width):
+            idx[c, m] = p[m % len(p)]
+    return idx
+
+
+def test_from_federated_matches_loop_reference():
+    fldata = _ragged_fldata()
+    shards = ClientShards.from_federated(fldata)
+    np.testing.assert_array_equal(np.asarray(shards.part_idx),
+                                  _loop_reference(fldata.parts))
+    np.testing.assert_array_equal(
+        np.asarray(shards.part_sizes),
+        np.array([len(p) for p in fldata.parts], dtype=np.int32))
+
+
+def test_from_federated_shard_cap():
+    fldata = _ragged_fldata()
+    cap = 2
+    shards = ClientShards.from_federated(fldata, max_shard_cap=cap)
+    assert shards.part_idx.shape[1] == cap
+    np.testing.assert_array_equal(np.asarray(shards.part_idx),
+                                  _loop_reference(fldata.parts, smax=cap))
+    np.testing.assert_array_equal(
+        np.asarray(shards.part_sizes),
+        np.minimum([len(p) for p in fldata.parts], cap).astype(np.int32))
+    with pytest.raises(ValueError, match="max_shard_cap"):
+        ClientShards.from_federated(fldata, max_shard_cap=0)
+
+
+# ----------------------------------------------------------------------
+# grouped cohort sampling
+# ----------------------------------------------------------------------
+def test_grouped_sampler_respects_group_ranges():
+    key = jax.random.PRNGKey(7)
+    n, k, g = 32, 8, 4
+    cohort = np.asarray(sample_clients_grouped(key, n, k, g))
+    assert cohort.shape == (k,)
+    per = k // g
+    for i in range(g):
+        block = cohort[i * per:(i + 1) * per]
+        assert ((block >= i * n // g) & (block < (i + 1) * n // g)).all()
+        assert len(set(block.tolist())) == per          # distinct in group
+
+
+def test_grouped_sampler_degenerates_to_flat():
+    key = jax.random.PRNGKey(3)
+    np.testing.assert_array_equal(
+        np.asarray(sample_clients_grouped(key, 10, 4, 1)),
+        np.asarray(sample_clients_jax(key, 10, 4)))
+
+
+def test_grouped_sampler_divisibility_errors():
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="divide"):
+        sample_clients_grouped(key, 10, 4, 4)           # N % G
+    with pytest.raises(ValueError, match="divide"):
+        sample_clients_grouped(key, 16, 6, 4)           # K % G
+
+
+# ----------------------------------------------------------------------
+# affinity re-layout
+# ----------------------------------------------------------------------
+def test_with_affinity_preserves_gather_values():
+    fldata = _ragged_fldata(n_clients=8, seed=1)
+    shards = ClientShards.from_federated(fldata)
+    aff = shards.with_affinity(4)
+    assert aff.num_groups == 4 and aff.group_block > 0
+    key = jax.random.PRNGKey(5)
+    clients = jnp.asarray([0, 3, 5, 6])
+    b0 = shards.gather(clients, batch=3, key=key)
+    b1 = aff.gather(clients, batch=3, key=key)
+    for k in b0:
+        np.testing.assert_array_equal(np.asarray(b0[k]), np.asarray(b1[k]))
+    assert aff.with_affinity(4) is aff                  # idempotent
+    with pytest.raises(ValueError, match="groups"):
+        shards.with_affinity(3)                         # 8 % 3
+
+
+# ----------------------------------------------------------------------
+# hierarchical reduce + tier byte accounting
+# ----------------------------------------------------------------------
+@needs8
+@pytest.mark.parametrize("group_size", [1, 2, 4, 8])
+def test_hierarchical_psum_equals_flat(group_size):
+    mesh = make_client_mesh(8)
+    x = jnp.arange(8 * 3, dtype=jnp.float32).reshape(8, 3)
+    from jax.sharding import PartitionSpec as P
+
+    def flat(v):
+        return jax.lax.psum(v, CLIENT_AXIS)
+
+    def hier(v):
+        return hierarchical_psum(v, CLIENT_AXIS, axis_size=8,
+                                 group_size=group_size)
+
+    kw = dict(in_specs=P(CLIENT_AXIS), out_specs=P())
+    ref = shard_map_norep(flat, mesh, **kw)(x)
+    got = shard_map_norep(hier, mesh, **kw)(x)
+    # integer-valued fp32 data: the ring and the flat reduce agree exactly
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_agg_tier_bytes_topology():
+    p = 100.0
+    flat = agg_tier_bytes(p, 8, 0)
+    assert flat["agg_tiers"] == 1.0 and flat["agg_groups"] == 1.0
+    assert flat["agg_intra_bytes"] == 0.0
+    assert flat["agg_cross_bytes"] == 7 * p
+    assert flat["agg_cross_bytes_per_host"] == 14 * p
+    hier = agg_tier_bytes(p, 8, 2)          # 4 groups of 2
+    assert hier["agg_tiers"] == 2.0 and hier["agg_groups"] == 4.0
+    assert hier["agg_intra_bytes"] == 4 * p
+    assert hier["agg_cross_bytes"] == 12 * p
+    # busiest ring member moves 2*(G-1) payloads < the flat root's 2*(D-1)
+    assert hier["agg_cross_bytes_per_host"] == 6 * p
+    assert agg_tier_bytes(p, 8, 8)["agg_tiers"] == 1.0   # gs == D: flat
+    with pytest.raises(ValueError, match="divide"):
+        agg_tier_bytes(p, 8, 3)
+
+
+# ----------------------------------------------------------------------
+# config validation + multi-process mesh seam
+# ----------------------------------------------------------------------
+def _base_cfg(**kw):
+    return FLConfig(algo="fedavg", num_clients=8, clients_per_round=4,
+                    top_n=2, mode="vmap", batch_per_client=2, **kw)
+
+
+def test_flconfig_mesh_knob_validation():
+    with pytest.raises(ValueError, match="mesh"):
+        _base_cfg(agg_group_size=2)                     # off-mesh
+    with pytest.raises(ValueError, match="mesh"):
+        _base_cfg(shard_samples=True)                   # off-mesh
+    mesh = make_client_mesh(1)
+    with pytest.raises(ValueError, match="agg_group_size"):
+        _base_cfg(mesh=mesh, agg_group_size=2)          # gs > d
+    if len(jax.devices()) >= 2:
+        with pytest.raises(ValueError, match="divisible"):
+            FLConfig(algo="fedavg", num_clients=9, clients_per_round=4,
+                     top_n=2, mode="vmap", batch_per_client=2,
+                     mesh=make_client_mesh(2), shard_samples=True)
+
+
+def test_make_client_mesh_process_count_mismatch():
+    # single-process session: asking for a 2-process mesh must fail loudly
+    with pytest.raises(ValueError, match="process"):
+        make_client_mesh(processes=2)
+    # processes=None and processes=1 build the same single-process mesh
+    m0 = make_client_mesh(1)
+    m1 = make_client_mesh(1, processes=1)
+    assert m0.axis_names == m1.axis_names
+    assert list(m0.devices.flat) == list(m1.devices.flat)
+
+
+# ----------------------------------------------------------------------
+# mesh cases: device-local gather + engine equivalence (8 devices)
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def task16():
+    train, _ = make_image_dataset(num_train=320, num_test=16, seed=1)
+    parts = iid_partition(train.ys, 16, seed=0)
+    data = FederatedData(train.xs, train.ys, parts)
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    params = {"l1": {"w": jax.random.normal(ks[0], (3072, 16)) * 0.02,
+                     "b": jnp.zeros((16,))},
+              "head": {"w": jax.random.normal(ks[1], (16, 10)) * 0.1,
+                       "b": jnp.zeros((10,))}}
+    return params, data
+
+
+def _loss(params, batch):
+    x = batch["images"].reshape(batch["images"].shape[0], -1)
+    h = jax.nn.relu(x @ params["l1"]["w"] + params["l1"]["b"])
+    logits = h @ params["head"]["w"] + params["head"]["b"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, batch["labels"][:, None],
+                                axis=-1).mean()
+
+
+def _cfg16(mesh, algo="fedldf", **kw):
+    return FLConfig(algo=algo, num_clients=16, clients_per_round=8,
+                    top_n=2, mode="vmap", batch_per_client=4, mesh=mesh,
+                    **kw)
+
+
+def _assert_trees_close(a, b, atol=ATOL):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol)
+
+
+@needs8
+def test_affinity_gather_device_local_matches_replicated(task16):
+    """The device-local gather (sample-sharded placement, shard_map index
+    rebase) returns bit-identical batches to the replicated-placement
+    global take, for a per-group cohort on the same key."""
+    _, data = task16
+    mesh = make_client_mesh(8)
+    aff = ClientShards.from_federated(data).with_affinity(8)
+    rep = aff.place(mesh)                       # replicated arrays
+    shd = aff.place(mesh, shard_samples=True)   # 1/8 sample blocks
+    assert shd.bytes_per_device() * 8 <= rep.bytes_per_device() + 8 * 8
+
+    key = jax.random.PRNGKey(11)
+    clients = sample_clients_grouped(key, 16, 8, 8)
+    b_rep = jax.jit(lambda c, k: rep.gather(c, 4, k, mesh=mesh))(
+        clients, key)
+    b_shd = jax.jit(lambda c, k: shd.gather(c, 4, k, mesh=mesh))(
+        clients, key)
+    for name in b_rep:
+        np.testing.assert_array_equal(np.asarray(b_rep[name]),
+                                      np.asarray(b_shd[name]))
+
+
+@needs8
+@pytest.mark.parametrize("algo", ["fedldf", "fedavg"])
+@pytest.mark.parametrize("group_size", [2, 4])
+def test_hierarchical_engine_matches_flat(task16, algo, group_size):
+    """Two-tier reduce (group psum + leader ring) reproduces the flat
+    single-psum trajectory — params, losses, and comm totals — on a fixed
+    seed (fp32 tolerance: the ring changes the fp32 summation order)."""
+    params, data = task16
+    mesh = make_client_mesh(8)
+    p0, l0 = run_training_scan(params, _loss, data, _cfg16(mesh, algo),
+                               rounds=4, seed=3)
+    p1, l1 = run_training_scan(params, _loss, data,
+                               _cfg16(mesh, algo, agg_group_size=group_size),
+                               rounds=4, seed=3)
+    _assert_trees_close(p0, p1)
+    np.testing.assert_allclose(l0.losses, l1.losses, atol=ATOL)
+    assert l0.meter.uplink_bytes == pytest.approx(l1.meter.uplink_bytes)
+    assert l0.meter.downlink_bytes == pytest.approx(l1.meter.downlink_bytes)
+
+
+@needs8
+def test_hierarchical_engine_with_compression(task16):
+    """EF residual scatter + packed quantized uplink accounting both ride
+    the tier-1 group reduce; the trajectory must still match flat."""
+    params, data = task16
+    mesh = make_client_mesh(8)
+    comp = CompressionConfig(bits=4, error_feedback=True)
+    p0, l0 = run_training_scan(params, _loss, data,
+                               _cfg16(mesh, compression=comp),
+                               rounds=3, seed=0)
+    p1, l1 = run_training_scan(params, _loss, data,
+                               _cfg16(mesh, compression=comp,
+                                      agg_group_size=4),
+                               rounds=3, seed=0)
+    _assert_trees_close(p0, p1)
+    assert l0.meter.uplink_bytes == pytest.approx(l1.meter.uplink_bytes)
+
+
+@needs8
+def test_sample_sharded_trajectory_matches_replicated(task16):
+    """End-to-end shard_samples=True run vs replicated placement of the
+    same affinity layout: identical participants (grouped draw both
+    sides), so the trajectories agree to fp32 tolerance."""
+    params, data = task16
+    mesh = make_client_mesh(8)
+    aff = ClientShards.from_federated(data).with_affinity(8)
+    p0, l0 = run_training_scan(params, _loss, aff.place(mesh),
+                               _cfg16(mesh), rounds=4, seed=2)
+    p1, l1 = run_training_scan(params, _loss, aff,
+                               _cfg16(mesh, shard_samples=True),
+                               rounds=4, seed=2)
+    _assert_trees_close(p0, p1)
+    np.testing.assert_allclose(l0.losses, l1.losses, atol=ATOL)
+    assert l0.meter.uplink_bytes == pytest.approx(l1.meter.uplink_bytes)
